@@ -1,0 +1,70 @@
+"""§Roofline — collate the dry-run artifacts into the per-(arch x shape)
+roofline table: three terms in seconds, dominant bottleneck, MODEL_FLOPS
+ratio, and a one-line lever per cell.
+
+Reads artifacts/dryrun/*.json produced by launch/dryrun.py. Hardware:
+TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+LEVERS = {
+    ("train", "compute_s"): "raise arithmetic intensity: fuse, cut remat recompute",
+    ("train", "memory_s"): "cut HBM traffic: fewer materialized intermediates, bf16 stashes, fused one-hot embedding",
+    ("train", "collective_s"): "overlap DP all-reduce with backward; int8 gradient compression; hierarchical psum",
+    ("prefill", "compute_s"): "at compute roofline — bigger attention chunks to lift MXU utilization",
+    ("prefill", "memory_s"): "flash-style chunking; keep KV bf16; avoid reshape copies",
+    ("prefill", "collective_s"): "shard seq (ring attention) instead of gathering KV; all-to-all MoE dispatch",
+    ("decode", "compute_s"): "decode is never compute-bound at batch<=128 — check accounting",
+    ("decode", "memory_s"): "KV cache read dominates: shard KV seq over more chips, quantize KV, GQA",
+    ("decode", "collective_s"): "split-K combine traffic: fewer/larger decode steps per dispatch, KV-local layout",
+}
+
+
+def load(out_dir: str = "artifacts/dryrun", mesh: str = "single"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def kind_of(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape]
+
+
+def run(out_dir: str = "artifacts/dryrun", mesh: str = "single") -> dict:
+    rows = load(out_dir, mesh)
+    if not rows:
+        print(f"no dry-run artifacts under {out_dir} (run python -m repro.launch.dryrun --all first)")
+        return {}
+    print(f"§Roofline — {mesh}-pod mesh, per-chip terms (s/step)")
+    hdr = f"{'arch':18s} {'shape':12s} {'compute':>9s} {'memory':>9s} {'collect':>9s} {'dominant':>12s} {'useful':>7s}"
+    print(hdr)
+    print("-" * len(hdr))
+    table = {}
+    for r in rows:
+        if r.get("status") == "skipped":
+            print(f"{r['arch']:18s} {r['shape']:12s} {'—':>9s} {'—':>9s} {'—':>9s} {'skipped':>12s}")
+            continue
+        t = r["roofline"]
+        key = (r["arch"], r["shape"])
+        table[key] = t
+        print(f"{r['arch']:18s} {r['shape']:12s} {t['compute_s']:9.2e} {t['memory_s']:9.2e} "
+              f"{t['collective_s']:9.2e} {t['dominant'][:-2]:>12s} {t['useful_flops_ratio']:7.3f}")
+    # roofline fraction = compute_s / bound_s (how far from the compute
+    # roofline the dominant term pins us); one lever sentence per cell
+    print("\nper-cell roofline fraction + dominant-term lever:")
+    for (arch, shape), t in sorted(table.items(), key=lambda kv: -kv[1]["bound_s"]):
+        lever = LEVERS.get((kind_of(shape), t["dominant"]), "")
+        frac = t["compute_s"] / max(t["bound_s"], 1e-30)
+        print(f"  {arch} x {shape}: {frac:5.1%} — {lever}")
+    return table
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Benchmark driver: one module per paper table/figure + the roofline
+collation. ``python -m benchmarks.run [--fast]``"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="skip the training cells")
+    ap.add_argument("--json", default=None, help="dump all results to a JSON file")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        fig3_density,
+        fig5_miout,
+        fig6_parallelism,
+        fig15_mixed_t,
+        fig17_dram,
+        kernel_bench,
+        roofline,
+        table1_ablation,
+        table2_models,
+        table3_hw,
+    )
+
+    suites = [
+        ("table1_ablation", lambda: table1_ablation.run()),
+        ("table2_models", lambda: table2_models.run(train_steps=0 if args.fast else 5)),
+        ("fig3_density", lambda: fig3_density.run()),
+        ("fig5_miout", lambda: fig5_miout.run()),
+        ("fig6_parallelism", lambda: fig6_parallelism.run()),
+        ("fig15_mixed_t", lambda: fig15_mixed_t.run()),
+        ("fig17_dram", lambda: fig17_dram.run()),
+        ("table3_hw", lambda: table3_hw.run()),
+        ("kernel_bench", lambda: kernel_bench.run()),
+        ("roofline", lambda: roofline.run()),
+    ]
+    results, failed = {}, []
+    for name, fn in suites:
+        print(f"\n{'=' * 70}\n{name}\n{'=' * 70}")
+        try:
+            results[name] = fn()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    print(f"\n{'=' * 70}")
+    if failed:
+        print(f"FAILED suites: {failed}")
+        sys.exit(1)
+    print(f"all {len(suites)} benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

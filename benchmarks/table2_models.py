@@ -1,0 +1,92 @@
+"""Table II — model-family comparison: ANN / QNN / BNN / SNN variants of the
+same topology. Reproducible cells: model size (Mbits) and parameter counts;
+plus a short synthetic-data training run per mode showing each variant
+learns (loss decreases) — accuracy ordering on IVS 3cls is not reproducible
+offline (DESIGN.md §8.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import synthetic_detection as sd
+from repro.models import snn_yolo as sy
+
+
+def model_size_mbits(n_params: float, weight_bits: int) -> float:
+    return n_params * weight_bits / 1e6
+
+
+def run(train_steps: int = 0) -> dict:
+    cfg = get_config("snn-det")
+    params, _ = sy.init_params(jax.random.PRNGKey(0), cfg)
+    n = sy.param_count(params)
+    n_pruned = int(n * 0.30)  # −70% (Table I)
+
+    rows = [
+        # name, act, weight_bits, params, block conv
+        ("ANN", "Float32", 32, n, False),
+        ("QNN-4", "FXP4", 32, n, False),
+        ("QNN-3", "FXP3", 32, n, False),
+        ("QNN-2", "FXP2", 32, n, False),
+        ("BNN", "Binary", 1, n, False),
+        ("SNN-a", "Binary(T=1,3)", 32, n, False),
+        ("SNN-d", "Binary(T=1,3)", 8, n_pruned, True),
+    ]
+    print("Table II — model family accounting")
+    print(f"{'model':8s} {'act':>14s} {'w_bits':>6s} {'params(M)':>10s} {'size(Mbit)':>11s}")
+    out = {}
+    for name, act, wb, p, blk in rows:
+        sz = model_size_mbits(p, wb)
+        out[name] = {"params_M": p / 1e6, "size_mbits": sz}
+        print(f"{name:8s} {act:>14s} {wb:6d} {p/1e6:10.2f} {sz:11.2f}")
+    print(f"paper: ANN 101.44 Mbit / SNN-d 7.68 Mbit; ours: "
+          f"{out['ANN']['size_mbits']:.2f} / {out['SNN-d']['size_mbits']:.2f}")
+
+    if train_steps:
+        # one tiny reduced-config training run per mode on synthetic data
+        small = dataclasses.replace(
+            cfg, input_hw=(96, 160), stem_channels=8, conv_block_channels=16,
+            stage_channels=((16, 16), (16, 32), (32, 32)), pooled_stages=3,
+            use_block_conv=False,
+        )
+        for mode in ("snn", "ann", "qnn", "bnn"):
+            mcfg = dataclasses.replace(small, mode=mode)
+            losses = _short_train(mcfg, train_steps)
+            out.setdefault("learning", {})[mode] = losses
+            print(f"  {mode:4s} loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    return out
+
+
+def _short_train(cfg, steps: int):
+    params, bn = sy.init_params(jax.random.PRNGKey(0), cfg)
+    # reduced config downsamples /16 (stem + conv + pooled_stages-1 pools),
+    # not the full model's /32 — match the target grid to the real head
+    grid_div = 2 ** (2 + cfg.pooled_stages - 1)
+    batch = next(sd.batches(2, hw=cfg.input_hw, steps=1, grid_div=grid_div))
+    imgs = jnp.asarray(batch["image"])
+    tgts = jnp.asarray(batch["target"])
+
+    def loss_fn(p, bn):
+        head, new_bn, _ = sy.forward(p, bn, imgs, cfg, train=True)
+        return sy.yolo_loss(head, tgts), new_bn
+
+    @jax.jit
+    def step(p, bn):
+        (l, new_bn), g = jax.value_and_grad(loss_fn, has_aux=True)(p, bn)
+        p = jax.tree_util.tree_map(lambda w, gw: w - 5e-3 * gw, p, g)
+        return p, new_bn, l
+
+    losses = []
+    for _ in range(steps):
+        params, bn, l = step(params, bn)
+        losses.append(float(l))
+    return losses
+
+
+if __name__ == "__main__":
+    run(train_steps=5)

@@ -1,0 +1,109 @@
+"""End-to-end training driver: the paper's SNN detector on the synthetic
+IVS-3cls-like dataset, with the full substrate — AdamW + paper's LR
+schedule, STBP surrogate gradients through the LIF, tdBN, checkpointing +
+supervisor restart, straggler monitor, and post-training fine-grained
+pruning + quantization (the SNN-a -> SNN-d pipeline of Table I).
+
+Reduced size for CPU (96x160 input, thinner channels); a few hundred steps.
+Usage:  PYTHONPATH=src python examples/train_snn_detector.py [--steps 300]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import pruning, quant
+from repro.data import synthetic_detection as sd
+from repro.models import snn_yolo as sy
+from repro.train import checkpoint as ckpt
+from repro.train import ft
+from repro.train import optimizer as opt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt", default="/tmp/snn_det_ckpt")
+    args = ap.parse_args(argv)
+
+    cfg = dataclasses.replace(
+        get_config("snn-det"),
+        input_hw=(96, 160), stem_channels=8, conv_block_channels=16,
+        stage_channels=((16, 16), (16, 32), (32, 64)), pooled_stages=3,
+        use_block_conv=False,
+    )
+    ocfg = opt.AdamWConfig(lr_peak=2e-3, lr_init=2e-4, lr_final=2e-5,
+                           warmup_steps=20, total_steps=args.steps,
+                           weight_decay=1e-3)
+
+    def init_state():
+        params, bn = sy.init_params(jax.random.PRNGKey(0), cfg)
+        return {"params": params, "bn": bn, "opt": opt.init_state(params, ocfg)}
+
+    def template():
+        return jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
+            init_state(),
+        )
+
+    def loss_fn(params, bn, imgs, tgts):
+        head, new_bn, _ = sy.forward(params, bn, imgs, cfg, train=True)
+        return sy.yolo_loss(head, tgts), new_bn
+
+    @jax.jit
+    def train_step(state, imgs, tgts):
+        (loss, new_bn), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], state["bn"], imgs, tgts
+        )
+        new_params, new_opt = opt.apply_updates(state["params"], grads, state["opt"], ocfg)
+        return {"params": new_params, "bn": new_bn, "opt": new_opt}, loss
+
+    # reduced config downsamples /16 (stem + conv + 2 stage pools), not /32
+    grid_div = 2 ** (2 + cfg.pooled_stages - 1)
+    stream = sd.batches(args.batch, hw=cfg.input_hw, steps=args.steps, grid_div=grid_div)
+    losses = []
+
+    def step_fn(state, step):
+        batch = next(stream)
+        state, loss = train_step(state, jnp.asarray(batch["image"]), jnp.asarray(batch["target"]))
+        losses.append(float(loss))
+        if step % 25 == 0:
+            print(f"step {step:4d} loss {losses[-1]:8.4f} "
+                  f"lr {float(opt.lr_schedule(ocfg, jnp.int32(step))):.2e}")
+        return state
+
+    sup = ft.Supervisor(ckpt_root=args.ckpt, save_every=50,
+                        heartbeat=ft.Heartbeat(args.ckpt + "/heartbeat.json"))
+    t0 = time.time()
+    state = sup.run(init_state=init_state, state_template=template,
+                    step_fn=step_fn, n_steps=args.steps)
+    print(f"trained {args.steps} steps in {time.time()-t0:.0f}s; "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+    # --- SNN-a -> SNN-d: prune 80% on 3x3, quantize weights to 8b ---
+    params = state["params"]
+    pruned = pruning.prune_tree(params, rate=0.8)
+    rep = pruning.tree_sparsity_report(pruned)
+    q = jax.tree_util.tree_map(
+        lambda x: quant.fake_quant_tensor(x, bits=8) if x.ndim == 4 else x, pruned
+    )
+    head, _, _ = sy.forward(q, state["bn"], jnp.asarray(next(
+        sd.batches(2, hw=cfg.input_hw, steps=1))["image"]), cfg)
+    print(f"pruned: kept {rep['kept_frac']*100:.1f}% of {rep['total_params']/1e3:.0f}k "
+          f"params (paper SNN-b: 30%)")
+    print(f"SNN-d style pruned+quantized forward OK: head {head.shape}, "
+          f"finite={bool(jnp.all(jnp.isfinite(head)))}")
+    if losses[-1] >= losses[0]:
+        raise SystemExit("loss did not decrease")
+    print("train_snn_detector OK")
+
+
+if __name__ == "__main__":
+    main()

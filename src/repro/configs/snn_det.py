@@ -1,0 +1,19 @@
+"""The paper's own architecture: sparse compressed SNN object detector
+(TCSI 2022). 1024x576 RGB input, CSP backbone, YOLOv2 head, (1,3) mixed
+time steps, 80% fine-grained pruning on 3x3 kernels, FXP8 weights,
+32x18 block convolution."""
+from repro.models.snn_yolo import SNNDetConfig
+
+CONFIG = SNNDetConfig(
+    arch_id="snn-det",
+    input_hw=(576, 1024),
+    num_classes=3,
+    num_anchors=5,
+    full_t=3,
+    threshold=0.5,
+    leak=0.25,
+    mode="snn",
+    weight_bits=8,
+    use_block_conv=True,
+    mixed_time=True,
+)

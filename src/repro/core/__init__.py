@@ -1,0 +1,16 @@
+"""Core paper contributions: LIF/tdBN, gated one-to-all sparse conv, bitmask
+compression, block convolution, pruning, quantization, mIoUT, energy model."""
+
+from . import bitmask, bitserial, block_conv, energy, lif, miout, pruning, quant, spike_conv
+
+__all__ = [
+    "bitmask",
+    "bitserial",
+    "block_conv",
+    "energy",
+    "lif",
+    "miout",
+    "pruning",
+    "quant",
+    "spike_conv",
+]

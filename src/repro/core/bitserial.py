@@ -1,0 +1,53 @@
+"""Bit-serial multibit input processing (paper §III-C.2, Fig 12).
+
+The accelerator supports the RGB encoding layer on the SAME spike datapath by
+splitting 8-bit inputs into B=8 bit planes and processing them bit-serially:
+
+    conv(x, w) = Σ_b 2^b · conv(bitplane_b(x), w)
+
+Each bit plane is a binary map — identical to a spike map — so one datapath
+serves both layer types (B=8 for the encoding layer, B=1 for SNN layers).
+
+On TPU the *optimized* path computes the encoding conv directly in int8 on
+the MXU; the bit-serial path here is the paper-faithful reference and the
+two are asserted equal in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def to_bitplanes(x_u8: jax.Array, bits: int = 8) -> jax.Array:
+    """uint8 NHWC -> (B, N, H, W, C) binary planes, LSB first."""
+    x = x_u8.astype(jnp.uint8)
+    planes = [((x >> b) & 1).astype(jnp.float32) for b in range(bits)]
+    return jnp.stack(planes, axis=0)
+
+
+def from_bitplanes(planes: jax.Array) -> jax.Array:
+    """(B, ...) binary -> integer-valued f32."""
+    bits = planes.shape[0]
+    weights = jnp.asarray([2.0**b for b in range(bits)], planes.dtype)
+    return jnp.tensordot(weights, planes, axes=(0, 0))
+
+
+def bitserial_conv(x_u8: jax.Array, w: jax.Array, conv_fn) -> jax.Array:
+    """Bit-serial conv: run ``conv_fn`` (any binary-input conv, e.g. the
+    gated one-to-all product) once per bit plane, shift-add the results.
+
+    This is the paper's unified encoding-layer support: the B loop sits
+    directly above the input-channel loop (KTBC order).
+    """
+    planes = to_bitplanes(x_u8)
+
+    def step(acc, bp):
+        b, plane = bp
+        return acc + (2.0**b) * conv_fn(plane, w), None
+
+    bits = planes.shape[0]
+    out0 = conv_fn(planes[0], w)
+    acc = out0
+    for b in range(1, bits):
+        acc = acc + (2.0**b) * conv_fn(planes[b], w)
+    return acc

@@ -1,0 +1,86 @@
+"""Block convolution (paper §II-B, ref [25]).
+
+Input feature maps are partitioned into NON-overlapping spatial blocks; each
+block is convolved independently with *replicate* padding at its own border.
+This removes cross-tile data dependency — on the ASIC that saves boundary
+partial-sum buffers; on a TPU mesh it means the spatial block grid can be
+sharded with ZERO halo exchange (no collective-permute between neighbors).
+
+Paper block size: 32×18 (W×H). We keep (block_h, block_w) = (18, 32).
+
+Layout convention throughout the detector: NHWC.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK_H = 18
+BLOCK_W = 32
+
+
+def _replicate_pad_hw(x: jax.Array, pad: int) -> jax.Array:
+    """Edge-replicate pad H and W axes of an NHWC tensor."""
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)), mode="edge")
+
+
+def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, padding="SAME") -> jax.Array:
+    """Plain NHWC x HWIO conv (the oracle the blocked version approximates)."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32 if x.dtype in (jnp.float32,) else None,
+    )
+
+
+def to_blocks(x: jax.Array, block_h: int = BLOCK_H, block_w: int = BLOCK_W) -> jax.Array:
+    """NHWC -> (N, nbh, nbw, block_h, block_w, C). H, W must divide evenly
+    (the paper resizes inputs to 1024×576 = 32·32 × 32·18 so they do)."""
+    n, h, w, c = x.shape
+    if h % block_h or w % block_w:
+        raise ValueError(f"({h},{w}) not divisible by block ({block_h},{block_w})")
+    x = x.reshape(n, h // block_h, block_h, w // block_w, block_w, c)
+    return x.transpose(0, 1, 3, 2, 4, 5)
+
+
+def from_blocks(xb: jax.Array) -> jax.Array:
+    """(N, nbh, nbw, bh, bw, C) -> NHWC."""
+    n, nbh, nbw, bh, bw, c = xb.shape
+    return xb.transpose(0, 1, 3, 2, 4, 5).reshape(n, nbh * bh, nbw * bw, c)
+
+
+def block_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_h: int = BLOCK_H,
+    block_w: int = BLOCK_W,
+    stride: int = 1,
+) -> jax.Array:
+    """Block convolution: independent per-block SAME conv with replicate
+    padding at block borders. 3×3 (or 1×1) HWIO weights, NHWC input.
+
+    Every block is independent ⇒ vmap over the flattened block grid; when the
+    block grid axis is sharded, XLA emits no halo communication.
+    """
+    kh, kw = w.shape[0], w.shape[1]
+    pad = (kh - 1) // 2
+    xb = to_blocks(x, block_h, block_w)
+    n, nbh, nbw, bh, bw, c = xb.shape
+    flat = xb.reshape(n * nbh * nbw, bh, bw, c)
+    padded = _replicate_pad_hw(flat, pad)
+    out = jax.lax.conv_general_dilated(
+        padded,
+        w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    oh, ow = out.shape[1], out.shape[2]
+    out = out.reshape(n, nbh, nbw, oh, ow, w.shape[-1])
+    return from_blocks(out)

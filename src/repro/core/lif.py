@@ -1,0 +1,191 @@
+"""Leaky integrate-and-fire neuron dynamics (paper §I, §II-A).
+
+Discrete-time approximate LIF with delta-shaped synaptic kernel:
+
+    v[t]   = leak * v[t-1] * reset_mask[t-1] + x[t]
+    s[t]   = H(v[t] - threshold)                     (Heaviside)
+
+Paper constants: threshold = 0.5, leak = 0.25 ("for a simple hardware
+implementation" — both are powers of two, shift-friendly).
+
+Reset modes:
+  * ``hard``  — v is zeroed where a spike fired (STBP/tdBN convention).
+  * ``soft``  — v -= threshold where a spike fired.
+  * ``none``  — no reset; used by the paper's Output Convolution layer which
+    "accumulates the membrane potential with no reset and averages the output
+    of all time steps".
+
+Training uses the STBP rectangular surrogate gradient (Wu et al. 2019):
+    d s / d v  ≈  (1/a) * 1[|v - θ| < a/2],   a = 1.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+THRESHOLD = 0.5
+LEAK = 0.25
+SURROGATE_WIDTH = 1.0
+
+
+@jax.custom_vjp
+def spike_fn(v: jax.Array, threshold: float = THRESHOLD) -> jax.Array:
+    """Heaviside spike with rectangular surrogate gradient."""
+    return (v >= threshold).astype(v.dtype)
+
+
+def _spike_fwd(v, threshold):
+    return spike_fn(v, threshold), (v, threshold)
+
+
+def _spike_bwd(res, g):
+    v, threshold = res
+    surrogate = (jnp.abs(v - threshold) < SURROGATE_WIDTH / 2).astype(g.dtype)
+    return (g * surrogate / SURROGATE_WIDTH, None)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+ResetMode = Literal["hard", "soft", "none"]
+
+
+class LIFState(NamedTuple):
+    v: jax.Array  # membrane potential, same shape as the neuron layer
+
+
+def lif_init(shape, dtype=jnp.float32) -> LIFState:
+    return LIFState(v=jnp.zeros(shape, dtype))
+
+
+def lif_step(
+    state: LIFState,
+    x: jax.Array,
+    *,
+    threshold: float = THRESHOLD,
+    leak: float = LEAK,
+    reset: ResetMode = "hard",
+):
+    """One LIF time step. Returns (new_state, spikes).
+
+    ``x`` is the synaptic input (conv/matmul output) at this time step.
+    """
+    v = state.v * leak + x
+    s = spike_fn(v, threshold)
+    if reset == "hard":
+        v_next = v * (1.0 - s)
+    elif reset == "soft":
+        v_next = v - s * threshold
+    elif reset == "none":
+        v_next = v
+    else:  # pragma: no cover
+        raise ValueError(f"unknown reset mode {reset!r}")
+    return LIFState(v=v_next), s
+
+
+def lif_over_time(
+    x_seq: jax.Array,
+    *,
+    threshold: float = THRESHOLD,
+    leak: float = LEAK,
+    reset: ResetMode = "hard",
+    init: LIFState | None = None,
+):
+    """Run LIF over a leading time axis. x_seq: (T, ...) -> spikes (T, ...).
+
+    Implemented with lax.scan so T is a loop in HLO, not unrolled — the
+    paper's "weights resident across the T loop" maps to scan keeping the
+    layer computation out of the T dimension.
+    """
+    if init is None:
+        init = lif_init(x_seq.shape[1:], x_seq.dtype)
+
+    def step(state, x):
+        state, s = lif_step(state, x, threshold=threshold, leak=leak, reset=reset)
+        return state, s
+
+    final, spikes = jax.lax.scan(step, init, x_seq)
+    return spikes, final
+
+
+def membrane_readout(x_seq: jax.Array, *, leak: float = LEAK) -> jax.Array:
+    """Paper's output layer: accumulate membrane potential with NO reset and
+    average over time steps. x_seq: (T, ...) -> (...)."""
+
+    def step(v, x):
+        v = v * leak + x
+        return v, v
+
+    _, vs = jax.lax.scan(step, jnp.zeros(x_seq.shape[1:], x_seq.dtype), x_seq)
+    return jnp.mean(vs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Threshold-dependent batch normalization (tdBN, Zheng et al. 2020, §II-A).
+# Normalizes over (T, N, spatial...) jointly per channel and scales by the
+# firing threshold so pre-activations sit in the responsive LIF range.
+# ---------------------------------------------------------------------------
+
+
+class TdBNParams(NamedTuple):
+    gamma: jax.Array
+    beta: jax.Array
+
+
+class TdBNState(NamedTuple):
+    mean: jax.Array
+    var: jax.Array
+    count: jax.Array  # scalar update counter for debugging/restart
+
+
+def tdbn_init(channels: int, dtype=jnp.float32):
+    params = TdBNParams(gamma=jnp.ones((channels,), dtype), beta=jnp.zeros((channels,), dtype))
+    state = TdBNState(
+        mean=jnp.zeros((channels,), dtype),
+        var=jnp.ones((channels,), dtype),
+        count=jnp.zeros((), jnp.int32),
+    )
+    return params, state
+
+
+def tdbn_apply(
+    params: TdBNParams,
+    state: TdBNState,
+    x: jax.Array,
+    *,
+    channel_axis: int = -1,
+    threshold: float = THRESHOLD,
+    alpha: float = 1.0,
+    momentum: float = 0.9,
+    training: bool = True,
+    eps: float = 1e-5,
+):
+    """tdBN: y = alpha * threshold * (x - mu) / sqrt(var + eps) * gamma + beta.
+
+    ``x`` carries time in its leading axis (T, N, ..., C) — normalization
+    statistics pool over every axis except the channel axis, which is the
+    tdBN prescription (treat T like extra batch).
+    Returns (y, new_state).
+    """
+    axis = channel_axis % x.ndim
+    reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+    shape = [1] * x.ndim
+    shape[axis] = x.shape[axis]
+
+    if training:
+        mean = jnp.mean(x, axis=reduce_axes)
+        var = jnp.var(x, axis=reduce_axes)
+        new_state = TdBNState(
+            mean=momentum * state.mean + (1 - momentum) * mean,
+            var=momentum * state.var + (1 - momentum) * var,
+            count=state.count + 1,
+        )
+    else:
+        mean, var = state.mean, state.var
+        new_state = state
+
+    x_hat = (x - mean.reshape(shape)) * jax.lax.rsqrt(var.reshape(shape) + eps)
+    y = alpha * threshold * x_hat * params.gamma.reshape(shape) + params.beta.reshape(shape)
+    return y, new_state

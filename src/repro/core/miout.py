@@ -1,0 +1,75 @@
+"""mIoUT — mean Intersection over Union across Time-steps (paper §II-D, eq 1,
+Fig 4) — and the mixed time-step schedule it drives.
+
+For a spike tensor s ∈ {0,1} with shape (T, ..., C):
+  firing count f = Σ_t s[t]                    per neuron
+  Intersection_c = #{neurons in channel c with f == T}
+  Union_c        = #{neurons in channel c with f >= 1}
+  mIoUT          = mean_c Intersection_c / Union_c
+
+Fig 4's worked example: 4 neurons fire at every step, 2 fire some-but-not-all
+steps → 4 / (4+2) = 0.67. High mIoUT ⇒ per-step features are nearly
+identical ⇒ that layer's input time step can drop to 1 (conv computed once,
+LIF still emits T distinct outputs — paper's C2 configuration).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def miout(spikes: jax.Array, *, channel_axis: int = -1, eps: float = 1e-9) -> jax.Array:
+    """spikes: (T, ..., C) binary. Returns scalar mIoUT."""
+    T = spikes.shape[0]
+    counts = jnp.sum(spikes.astype(jnp.int32), axis=0)  # (..., C)
+    axis = channel_axis % counts.ndim
+    reduce_axes = tuple(i for i in range(counts.ndim) if i != axis)
+    inter = jnp.sum((counts == T).astype(jnp.float32), axis=reduce_axes)
+    union = jnp.sum((counts >= 1).astype(jnp.float32), axis=reduce_axes)
+    iou = inter / jnp.maximum(union, eps)
+    # channels that never fire contribute IoU 0 with union 0; the paper
+    # averages over channels — mask out all-silent channels to avoid 0/0.
+    valid = (union > 0).astype(jnp.float32)
+    return jnp.sum(iou * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def repeat_conv_for_timesteps(conv_out: jax.Array, out_t: int) -> jax.Array:
+    """Mixed-time-step mechanics (paper §II-A): a layer with in_T=1 computes
+    its convolution ONCE and feeds the same result to the LIF for ``out_t``
+    steps; the LIF state evolution makes the outputs differ across steps.
+    conv_out: (...,) single-step result -> (out_t, ...)."""
+    return jnp.broadcast_to(conv_out[None], (out_t,) + conv_out.shape)
+
+
+def schedule_ops(layer_macs: Sequence[int], in_ts: Sequence[int]) -> int:
+    """Total MACs for a mixed-time-step schedule: each layer's conv runs
+    in_T times (the LIF/elementwise cost is negligible in the paper's
+    accounting)."""
+    if len(layer_macs) != len(in_ts):
+        raise ValueError("length mismatch")
+    return int(sum(m * t for m, t in zip(layer_macs, in_ts)))
+
+
+def choose_schedule(
+    mious: Sequence[float],
+    layer_macs: Sequence[int],
+    *,
+    threshold: float = 0.6,
+    full_t: int = 3,
+) -> list[int]:
+    """Greedy prefix rule from the paper: layers at the FRONT of the network
+    whose mIoUT exceeds the threshold run with in_T=1; the first layer with
+    low mIoUT and everything after it runs at full_t. (The paper only drops
+    prefix layers — dropping late layers hurts accuracy without saving much,
+    Fig 15.)"""
+    in_ts = []
+    prefix = True
+    for m in mious:
+        if prefix and m >= threshold:
+            in_ts.append(1)
+        else:
+            prefix = False
+            in_ts.append(full_t)
+    return [t for t, _ in zip(in_ts, layer_macs)]

@@ -1,0 +1,80 @@
+"""Fine-grained magnitude pruning (paper §II-C, ref [26] Han et al.).
+
+Weights below a magnitude threshold are zeroed; the threshold is set by the
+target pruning RATE. Per the paper: prune 3×3 kernels at 80%, keep all 1×1
+kernels intact. Net effect on their model: −70% parameters, −47.3% operation
+count.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def magnitude_threshold(w: jax.Array, rate: float) -> jax.Array:
+    """|w| value such that ``rate`` fraction of entries fall below it."""
+    if not 0.0 <= rate < 1.0:
+        raise ValueError(f"rate must be in [0,1), got {rate}")
+    flat = jnp.abs(w).reshape(-1)
+    k = int(np.floor(rate * flat.size))
+    if k == 0:
+        return jnp.zeros((), w.dtype)
+    return jnp.sort(flat)[k - 1]
+
+
+def prune_by_rate(w: jax.Array, rate: float) -> jax.Array:
+    """Zero the smallest-|magnitude| ``rate`` fraction of ``w``."""
+    thr = magnitude_threshold(w, rate)
+    return jnp.where(jnp.abs(w) > thr, w, jnp.zeros_like(w))
+
+
+def make_mask(w: jax.Array, rate: float) -> jax.Array:
+    thr = magnitude_threshold(w, rate)
+    return (jnp.abs(w) > thr).astype(w.dtype)
+
+
+def is_spatial_kernel(w: jax.Array) -> bool:
+    """True for HWIO conv kernels with spatial extent > 1 (the 3×3 targets)."""
+    return w.ndim == 4 and (w.shape[0] > 1 or w.shape[1] > 1)
+
+
+def prune_tree(
+    params: Any,
+    rate: float = 0.8,
+    *,
+    select: Callable[[jax.Array], bool] = is_spatial_kernel,
+) -> Any:
+    """Apply fine-grained pruning across a parameter pytree.
+
+    Per the paper: only spatial (3×3) kernels are pruned; 1×1 kernels and
+    biases/norms are left intact.
+    """
+    return jax.tree_util.tree_map(lambda w: prune_by_rate(w, rate) if select(w) else w, params)
+
+
+def mask_tree(params: Any, rate: float = 0.8, *, select=is_spatial_kernel) -> Any:
+    """Masks for prune-aware fine-tuning (masked gradient updates)."""
+    return jax.tree_util.tree_map(
+        lambda w: make_mask(w, rate) if select(w) else jnp.ones_like(w), params
+    )
+
+
+def density(w: jax.Array) -> float:
+    """Fraction of nonzero weights (drives the Fig 3 benchmark)."""
+    return float(jnp.mean((w != 0).astype(jnp.float32)))
+
+
+def tree_sparsity_report(params: Mapping[str, Any]) -> dict:
+    """Per-leaf density + aggregate params kept (Table I accounting)."""
+    leaves = {}
+    total = kept = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        nnz = int(jnp.sum(leaf != 0))
+        leaves[name] = {"shape": tuple(leaf.shape), "nnz": nnz, "density": nnz / leaf.size}
+        total += leaf.size
+        kept += nnz
+    return {"leaves": leaves, "total_params": total, "kept_params": kept, "kept_frac": kept / max(total, 1)}

@@ -1,0 +1,80 @@
+"""8-bit fixed-point quantization (paper Table I 'Quantize (8 bits)', Fig 16:
+8b FXP weights, 8b FXP Vmem, 16b FXP accumulators).
+
+Symmetric per-tensor (or per-channel) FXP: q = clip(round(x / s), -128, 127),
+s = max|x| / 127. Quantization-aware paths use the straight-through
+estimator so the pruned+quantized model can be fine-tuned (paper fine-tunes
+5 epochs after quantization).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127
+ACC_BITS = 16  # the ASIC accumulator width; asserted in tests, not enforced
+
+
+class Quantized(NamedTuple):
+    q: jax.Array  # int8 payload
+    scale: jax.Array  # f32 scale(s)
+
+
+def quantize(x: jax.Array, *, axis=None, bits: int = 8) -> Quantized:
+    qmax = 2 ** (bits - 1) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return Quantized(q=q, scale=scale.astype(jnp.float32))
+
+
+def dequantize(qx: Quantized) -> jax.Array:
+    return qx.q.astype(jnp.float32) * qx.scale
+
+
+@jax.custom_vjp
+def fake_quant(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Straight-through-estimator quantize→dequantize for QAT."""
+    qmax = INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return q * scale
+
+
+def _fq_fwd(x, scale):
+    return fake_quant(x, scale), None
+
+
+def _fq_bwd(_, g):
+    return (g, None)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant_tensor(x: jax.Array, bits: int = 8) -> jax.Array:
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    return fake_quant(x, scale)
+
+
+def int8_conv_accumulate(x_q: jax.Array, w_q: jax.Array, dn) -> jax.Array:
+    """int8 × int8 → int32 accumulation (TPU-native widening; the ASIC used
+    16b accumulators — tests assert results stay within 16b range for the
+    paper's layer sizes)."""
+    return jax.lax.conv_general_dilated(
+        x_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=dn,
+    )
+
+
+def acc_range_ok(acc: jax.Array, bits: int = ACC_BITS) -> jax.Array:
+    lim = 2 ** (bits - 1)
+    return jnp.all((acc >= -lim) & (acc < lim))

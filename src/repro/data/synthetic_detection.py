@@ -1,0 +1,108 @@
+"""Synthetic cityscape-like detection data matched to IVS 3cls statistics.
+
+The IVS 3cls dataset (paper §IV-A: ~10k train / 1k test, 1920x1080 resized
+to 1024x576, three classes: vehicle / bike / pedestrian) is not
+redistributable and this container is offline, so we generate a synthetic
+set with matched statistics (DESIGN.md §8.3):
+
+* image: per-image sky/road gradient + textured noise (so the encoder sees
+  non-trivial multibit input and activation sparsity statistics are
+  realistic after the first LIF),
+* objects: 1–12 boxes per image; class mix 55% vehicle / 22% bike / 23%
+  pedestrian; log-normal box sizes with per-class aspect ratios (vehicles
+  wide, pedestrians tall); objects rendered as filled rectangles with
+  class-dependent intensity so boxes are actually learnable,
+* deterministic per (split, index) — reproducible across hosts without a
+  shared filesystem; each data-parallel host generates only its shard.
+
+Targets use the YOLOv2 grid format of models/snn_yolo.py: (gh, gw, A, 5+C)
+with [tx, ty, tw, th, obj, cls...].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Iterator, Optional
+
+import numpy as np
+
+CLASSES = ("vehicle", "bike", "pedestrian")
+CLASS_P = np.array([0.55, 0.22, 0.23])
+# per-class (mean_area_frac, aspect w/h)
+SIZE_STATS = {0: (0.015, 1.9), 1: (0.004, 0.7), 2: (0.003, 0.45)}
+
+
+def _render_image(rng, hw, boxes, classes):
+    h, w = hw
+    sky = np.linspace(0.65, 0.25, h, dtype=np.float32)[:, None, None]
+    img = np.repeat(np.repeat(sky, w, axis=1), 3, axis=2).copy()
+    img += rng.normal(0, 0.05, (h, w, 3)).astype(np.float32)
+    # low-frequency texture (buildings/road patches)
+    for _ in range(6):
+        x0, y0 = rng.integers(0, w - 8), rng.integers(0, h - 8)
+        ww, hh = rng.integers(8, w // 2), rng.integers(8, h // 2)
+        img[y0 : y0 + hh, x0 : x0 + ww] += rng.uniform(-0.15, 0.15)
+    shade = {0: (0.15, 0.25, 0.55), 1: (0.55, 0.2, 0.2), 2: (0.2, 0.5, 0.25)}
+    for (cx, cy, bw, bh), c in zip(boxes, classes):
+        x0 = int(max(0, (cx - bw / 2) * w))
+        x1 = int(min(w, (cx + bw / 2) * w))
+        y0 = int(max(0, (cy - bh / 2) * h))
+        y1 = int(min(h, (cy + bh / 2) * h))
+        if x1 > x0 and y1 > y0:
+            img[y0:y1, x0:x1] = np.asarray(shade[c]) + rng.normal(0, 0.03, 3)
+    return np.clip(img, 0.0, 1.0)
+
+
+def sample(index: int, *, split: str = "train", hw=(576, 1024), num_classes: int = 3,
+           num_anchors: int = 5, grid_div: int = 32):
+    """Deterministic (image, target, boxes) for one index."""
+    seed = (hash(split) & 0xFFFF) * 1_000_003 + index
+    rng = np.random.default_rng(seed)
+    n_obj = int(rng.integers(1, 13))
+    classes = rng.choice(num_classes, size=n_obj, p=CLASS_P)
+    boxes = []
+    for c in classes:
+        area, aspect = SIZE_STATS[int(c)]
+        a = float(np.exp(rng.normal(np.log(area), 0.6)))
+        bh = float(np.sqrt(a / aspect))
+        bw = float(a / max(bh, 1e-6))
+        bw, bh = min(bw, 0.6), min(bh, 0.6)
+        cx = float(rng.uniform(bw / 2, 1 - bw / 2))
+        # objects sit in the lower 2/3 (road) like driving footage
+        cy = float(rng.uniform(max(bh / 2, 0.33), 1 - bh / 2))
+        boxes.append((cx, cy, bw, bh))
+    img = _render_image(rng, hw, boxes, classes)
+
+    gh, gw = hw[0] // grid_div, hw[1] // grid_div
+    tgt = np.zeros((gh, gw, num_anchors, 5 + num_classes), np.float32)
+    for (cx, cy, bw, bh), c in zip(boxes, classes):
+        gx, gy = min(int(cx * gw), gw - 1), min(int(cy * gh), gh - 1)
+        a = int(rng.integers(0, num_anchors))
+        tgt[gy, gx, a, 0:4] = (cx * gw - gx, cy * gh - gy, bw, bh)
+        tgt[gy, gx, a, 4] = 1.0
+        tgt[gy, gx, a, 5 + int(c)] = 1.0
+    return img, tgt, (boxes, classes)
+
+
+def batches(
+    batch_size: int,
+    *,
+    split: str = "train",
+    hw=(576, 1024),
+    steps: Optional[int] = None,
+    host_id: int = 0,
+    n_hosts: int = 1,
+    **kw,
+) -> Iterator[dict]:
+    """Host-sharded deterministic batch stream: host h yields indices
+    h, h+n_hosts, ... so the global batch is disjoint across hosts."""
+    i = 0
+    step = 0
+    while steps is None or step < steps:
+        imgs, tgts = [], []
+        for _ in range(batch_size):
+            img, tgt, _ = sample(i * n_hosts + host_id, split=split, hw=hw, **kw)
+            imgs.append(img)
+            tgts.append(tgt)
+            i += 1
+        yield {"image": np.stack(imgs), "target": np.stack(tgts)}
+        step += 1

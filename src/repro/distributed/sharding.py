@@ -1,0 +1,182 @@
+"""Logical-axis sharding rules → concrete NamedSharding/PartitionSpec.
+
+Every model annotates its params and activations with LOGICAL axis names;
+one rules table per deployment maps them onto mesh axes. This is the single
+place the mesh topology touches model code, so re-meshing (elastic restart
+on a different device count) only swaps the rules.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes, or None = replicated)
+# 'pod' composes with 'data' for the batch so the multi-pod mesh shards
+# batch hierarchically (inter-pod gradient reduction happens over DCN).
+def default_rules(mesh: Mesh, *, fsdp: bool = False, kv_seq_shard: bool = True) -> dict:
+    """The one rules table. Notable choices (EXPERIMENTS.md §Perf discusses
+    the alternatives):
+
+    * ``kv_seq`` → 'model': decode-time KV caches are sharded along the
+      SEQUENCE dim. KV-head sharding dies on GQA archs (8 kv heads cannot
+      split 16 ways) while sequence sharding is universal and turns decode
+      attention into a split-K reduction (XLA inserts the small combine
+      all-reduce). It also divides the per-chip KV bytes — the decode
+      roofline's memory term — by the model-axis size.
+    * ``opt_state`` → everything: int8 moments are flat (nblocks, 256) and
+      shard over ALL axes (ZeRO across the whole fleet).
+    * ``embed`` under fsdp → 'data': ZeRO-3 weight sharding composed with
+      the 'model' tensor sharding of the per-layer matrices.
+    """
+    axes = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    batch_axis = batch if len(batch) > 1 else (batch[0] if batch else None)
+    all_axes = tuple(a for a in ("pod", "data", "model") if a in axes)
+    rules = {
+        "batch": batch_axis,
+        "seq": None,
+        "embed": "data" if fsdp else None,  # ZeRO-3 weight shard over data
+        "embed2": None,  # second d_model axis of square matrices
+        "act_embed": None,
+        "act_seq": "model",  # sequence-parallel activations (Megatron-SP)
+        "heads": "model",
+        # KV caches shard EITHER the sequence dim (universal; GQA-safe) or
+        # the kv-head dim — never both (same mesh axis twice is invalid)
+        "kv_heads": None if kv_seq_shard else "model",
+        "kv_seq": "model" if kv_seq_shard else None,
+        "qkv": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "expert_cap": None,
+        "layers": None,
+        "conv_k": None,
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "spatial_blocks": "model",  # detector: block-conv grid (paper C3/C4)
+        "channels": None,
+        "opt_state": all_axes,
+    }
+    return rules
+
+
+def spec_for(axes: Sequence[Optional[str]], rules: Mapping[str, Any]) -> P:
+    """Logical axis names -> PartitionSpec via the rules table."""
+    parts = []
+    for a in axes:
+        if a is None:
+            parts.append(None)
+        else:
+            parts.append(rules.get(a))
+    return P(*parts)
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+
+def tree_shardings(mesh: Mesh, axes_tree: Any, rules: Mapping[str, Any]):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree_util.tree_map(
+        lambda axes: NamedSharding(mesh, spec_for(axes, rules)),
+        axes_tree,
+        is_leaf=_is_axes,
+    )
+
+
+def _part_size(mesh: Mesh, part) -> int:
+    if part is None:
+        return 1
+    if isinstance(part, str):
+        return int(mesh.shape[part])
+    return int(np.prod([mesh.shape[p] for p in part]))
+
+
+def sanitize_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Drop partitions that do not evenly divide their dimension (jax
+    rejects explicitly-given uneven in_shardings). Replicating a small dim
+    is always legal; the big tensors keep their full sharding."""
+    parts = []
+    for i, part in enumerate(spec):
+        if part is not None and (
+            i >= len(shape) or shape[i] % _part_size(mesh, part) != 0
+        ):
+            parts.append(None)
+        else:
+            parts.append(part)
+    return P(*parts)
+
+
+def tree_shardings_for(mesh: Mesh, axes_tree: Any, shapes_tree: Any, rules: Mapping[str, Any]):
+    """Like tree_shardings but shape-aware: per-leaf specs are sanitized
+    against the leaf's global shape (shapes_tree: matching pytree of
+    ShapeDtypeStructs / arrays)."""
+
+    def f(axes, shp):
+        spec = sanitize_spec(mesh, spec_for(axes, rules), shp.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(f, axes_tree, shapes_tree, is_leaf=_is_axes)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]], rules: Mapping[str, Any]):
+    """with_sharding_constraint by logical names (no-op outside a mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec_for(axes, rules))
+    except (ValueError, RuntimeError):
+        return x
+
+
+# --------------------------------------------------- activation constraints --
+# Model code calls constrain_act() at layer boundaries; it is a no-op unless
+# the launcher installed rules via use_rules(). This is how sequence-parallel
+# activation sharding (Megatron-SP: the remat stash is seq-sharded over
+# 'model', cutting per-chip activation memory by the TP degree) reaches the
+# model without the model importing mesh state.
+
+import contextlib
+import threading as _threading
+
+_ACT = _threading.local()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Mapping[str, Any], mesh: Optional[Mesh] = None):
+    prev = getattr(_ACT, "rules", None)
+    prev_mesh = getattr(_ACT, "mesh", None)
+    _ACT.rules = rules
+    _ACT.mesh = mesh
+    try:
+        yield
+    finally:
+        _ACT.rules = prev
+        _ACT.mesh = prev_mesh
+
+
+def current_rules():
+    return getattr(_ACT, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_ACT, "mesh", None)
+
+
+def constrain_act(x: jax.Array, axes: Sequence[Optional[str]]):
+    rules = getattr(_ACT, "rules", None)
+    if rules is None:
+        return x
+    # skip degenerate dims (decode s=1): dropping the constraint is always
+    # legal, it is only a hint
+    spec = spec_for(axes, rules)
+    for dim, part in enumerate(spec):
+        if part is not None and x.shape[dim] == 1:
+            return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def num_devices(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

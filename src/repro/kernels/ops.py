@@ -1,0 +1,200 @@
+"""Jitted wrappers around the Pallas kernels: host-side packing (bitmask
+compression, block layout) + dispatch + unpacking.
+
+These are the public entry points; `ref.py` holds the pure-jnp oracles each
+wrapper is tested against (interpret mode on CPU, real TPU lowering on HW).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gated_one_to_all as g2a
+from . import spike_lif as sl
+from . import bitmask_matmul as bmm
+
+
+# ---------------------------------------------------------------------------
+# Packing for the gated one-to-all kernel
+# ---------------------------------------------------------------------------
+
+
+class PackedConvWeights(NamedTuple):
+    maskp: jax.Array  # (KB, taps, C8, KBLK) uint8 bit-packed over C
+    vals: jax.Array  # (KB, VPAD) int8
+    tap_any: jax.Array  # (KB, taps) int32
+    kh: int
+    kw: int
+    cin: int  # padded input channels
+    kout: int  # true output channels
+    kblk: int
+
+    @property
+    def compressed_bytes(self) -> int:
+        """HBM bytes the kernel actually reads for weights (the Fig 17
+        accounting): packed mask bits + padded nonzero values."""
+        return self.maskp.size + self.vals.size
+
+
+def pack_conv_weights(w_int8: np.ndarray, *, kblk: int = 128) -> PackedConvWeights:
+    """w_int8: (kh, kw, Cin, K) int8 (zeros = pruned). Host-side pack."""
+    w = np.asarray(w_int8)
+    kh, kw, cin, k = w.shape
+    taps = kh * kw
+    cin_p = int(np.ceil(cin / 8)) * 8
+    k_p = int(np.ceil(k / kblk)) * kblk
+    wp = np.zeros((kh, kw, cin_p, k_p), np.int8)
+    wp[:, :, :cin, :k] = w
+    kb_total = k_p // kblk
+
+    maskp = np.zeros((kb_total, taps, cin_p // 8, kblk), np.uint8)
+    vals_list = []
+    tap_any = np.zeros((kb_total, taps), np.int32)
+    for kb in range(kb_total):
+        wb = wp[:, :, :, kb * kblk : (kb + 1) * kblk].reshape(taps, cin_p, kblk)
+        mask = (wb != 0).astype(np.uint8)
+        tap_any[kb] = mask.reshape(taps, -1).any(axis=1).astype(np.int32)
+        # pack bits along C: bit c -> word c//8, position c%8
+        m = mask.reshape(taps, cin_p // 8, 8, kblk)
+        for b in range(8):
+            maskp[kb] |= (m[:, :, b, :] << b).astype(np.uint8)
+        vals_list.append(wb[wb != 0].ravel())
+    vpad = max((v.size for v in vals_list), default=1)
+    vpad = max(vpad, 1)
+    vals = np.zeros((kb_total, vpad), np.int8)
+    for kb, v in enumerate(vals_list):
+        vals[kb, : v.size] = v
+    return PackedConvWeights(
+        maskp=jnp.asarray(maskp),
+        vals=jnp.asarray(vals),
+        tap_any=jnp.asarray(tap_any),
+        kh=kh,
+        kw=kw,
+        cin=cin_p,
+        kout=k,
+        kblk=kblk,
+    )
+
+
+def _block_layout(spikes: jax.Array, *, bh: int, bw: int, pad: int, cin_p: int) -> jax.Array:
+    """NHWC int8 spikes → (N*nbh*nbw, bh+2p, bw+2p, Cp) replicate-padded
+    independent blocks (block convolution, paper §II-B)."""
+    n, h, w, c = spikes.shape
+    if h % bh or w % bw:
+        raise ValueError(f"({h},{w}) not divisible by block ({bh},{bw})")
+    x = spikes
+    if c < cin_p:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cin_p - c)))
+    x = x.reshape(n, h // bh, bh, w // bw, bw, cin_p).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(-1, bh, bw, cin_p)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)), mode="edge")
+    return x
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "kh",
+        "kw",
+        "kblk",
+        "bh",
+        "bw",
+        "interpret",
+        "out_h",
+        "out_w",
+        "batch",
+        "kout",
+    ),
+)
+def _dispatch(spike_blocks, pw_maskp, pw_vals, pw_tap_any, *, kh, kw, kblk, bh, bw, out_h, out_w, batch, kout, interpret):
+    out = g2a.gated_one_to_all_pallas(
+        spike_blocks,
+        pw_maskp,
+        pw_vals,
+        pw_tap_any,
+        kh=kh,
+        kw=kw,
+        bh=bh,
+        bw=bw,
+        kblk=kblk,
+        interpret=interpret,
+    )
+    nbh, nbw = out_h // bh, out_w // bw
+    out = out.reshape(batch, nbh, nbw, bh, bw, -1).transpose(0, 1, 3, 2, 4, 5)
+    out = out.reshape(batch, out_h, out_w, -1)
+    return out[..., :kout]
+
+
+def gated_conv(
+    spikes: jax.Array,
+    pw: PackedConvWeights,
+    *,
+    bh: int = g2a.BLOCK_H,
+    bw: int = g2a.BLOCK_W,
+    interpret: bool = True,
+) -> jax.Array:
+    """Sparse-compressed block convolution of int8 spikes. NHWC → NHWK int32."""
+    n, h, w, _ = spikes.shape
+    pad = (pw.kh - 1) // 2
+    blocks = _block_layout(spikes.astype(jnp.int8), bh=bh, bw=bw, pad=pad, cin_p=pw.cin)
+    return _dispatch(
+        blocks,
+        pw.maskp,
+        pw.vals,
+        pw.tap_any,
+        kh=pw.kh,
+        kw=pw.kw,
+        kblk=pw.kblk,
+        bh=bh,
+        bw=bw,
+        out_h=h,
+        out_w=w,
+        batch=n,
+        kout=pw.kout,
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused LIF
+# ---------------------------------------------------------------------------
+
+
+def fused_lif(
+    psum_t: jax.Array,  # (T, M, C) f32 synaptic inputs
+    *,
+    threshold: float = 0.5,
+    leak: float = 0.25,
+    mblk: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """LIF over T fully fused in VMEM (no HBM round-trip of the membrane
+    potential between steps). Returns int8 spikes (T, M, C)."""
+    return sl.fused_lif_pallas(
+        psum_t, threshold=threshold, leak=leak, mblk=mblk, interpret=interpret
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bitmask sparse matmul (paper's format applied to LM FFN weights)
+# ---------------------------------------------------------------------------
+
+
+def pack_matmul_weights(w: np.ndarray, *, kblk: int = 512, nblk: int = 256):
+    return bmm.pack_weights(w, kblk=kblk, nblk=nblk)
+
+
+def bitmask_matmul(
+    x: jax.Array,
+    packed,
+    *,
+    mblk: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """x (M, K) f32/bf16 × bitmask-compressed W (K, N) → (M, N) f32."""
+    return bmm.bitmask_matmul_pallas(x, packed, mblk=mblk, interpret=interpret)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose-tested per shape/dtype
+sweep in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import block_conv as bc
+from repro.core import lif as lifm
+
+
+def gated_conv_ref(spikes: jax.Array, w_dense: jax.Array, *, bh: int = 18, bw: int = 32):
+    """Block convolution (replicate-padded independent tiles) with dense
+    weights — the semantics the gated one-to-all kernel must reproduce.
+    spikes NHWC (any int/float), w HWIO. Returns f32."""
+    return bc.block_conv2d(
+        spikes.astype(jnp.float32), w_dense.astype(jnp.float32), block_h=bh, block_w=bw
+    )
+
+
+def fused_lif_ref(psum_t: jax.Array, *, threshold: float = 0.5, leak: float = 0.25):
+    """Scan-based LIF oracle. psum_t (T, M, C) → int8 spikes."""
+    spikes, _ = lifm.lif_over_time(
+        psum_t.astype(jnp.float32), threshold=threshold, leak=leak, reset="hard"
+    )
+    return spikes.astype(jnp.int8)
+
+
+def bitmask_matmul_ref(x: jax.Array, w_dense: jax.Array):
+    return jnp.dot(x.astype(jnp.float32), w_dense.astype(jnp.float32))

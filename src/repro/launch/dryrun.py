@@ -1,0 +1,378 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks the device count on first
+# init). The dry-run — and ONLY the dry-run — sees 512 placeholder host
+# devices so jax.make_mesh can build the production meshes; smoke tests and
+# benches keep seeing one device.
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell against the production meshes and record the compiled artifact's
+roofline terms.
+
+For each cell this driver:
+  1. builds the (16,16) single-pod (and optionally (2,16,16) multi-pod) mesh,
+  2. resolves the arch config + ShapeDtypeStruct input specs (no allocation),
+  3. jits the right step (train_step / prefill / decode) with NamedShardings
+     derived from the logical-axis rules,
+  4. .lower().compile() — failures here are sharding bugs in the system,
+  5. prints memory_analysis() (proves the cell fits per-chip HBM) and
+     cost_analysis(), parses collective bytes from the per-device HLO, and
+  6. writes artifacts/dryrun/<arch>__<shape>__<mesh>.json for
+     benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--subprocess]
+  ./scripts/run_dryrun.sh   # full sweep used for artifacts/
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.distributed.sharding import (
+    default_rules,
+    spec_for,
+    tree_shardings_for,
+    use_rules,
+)
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.models import zoo
+from repro.train import optimizer as opt
+from repro.train import trainer
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+# per-arch training presets: microbatch count at global_batch=256 and
+# whether optimizer moments are int8 (EXPERIMENTS.md §Dry-run napkin math).
+# n_microbatch is the MINIMUM that fits per-chip HBM: every extra microbatch
+# multiplies the ZeRO-3 parameter all-gathers and the gradient reductions
+# (§Perf iteration 2: llama3-405b collective term scales ~1/n_mb when
+# dropping 16 -> 4).
+TRAIN_PRESETS = {
+    "qwen1.5-0.5b": (2, False),
+    "whisper-small": (2, False),
+    "rwkv6-3b": (4, False),
+    "olmoe-1b-7b": (4, True),
+    "deepseek-moe-16b": (4, True),
+    "zamba2-7b": (4, True),
+    "qwen1.5-32b": (4, True),
+    "llava-next-34b": (4, True),
+    "qwen1.5-110b": (4, True),
+    "llama3-405b": (4, True),
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum RESULT bytes of every collective op in the per-device HLO
+    (optimized HLO printers omit operand type annotations, so the result
+    shape — between '=' and the op name — is the reliable size signal;
+    for all-reduce it equals the operand size, for all-gather it is the
+    gathered size, i.e. an upper bound on per-link traffic).
+    Returns {op_kind: bytes, ..., 'total': bytes, 'count': n}. `-done` ops
+    are skipped (they alias the in-flight `-start`)."""
+    out: dict = {}
+    count = 0
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        head = line[: m.start()]
+        eq = head.find("=")
+        if eq < 0:
+            continue
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(head[eq:]):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + nbytes
+        count += 1
+    out["total"] = sum(v for k, v in out.items() if k != "count")
+    out["count"] = count
+    return out
+
+
+def exact_param_count(cfg) -> int:
+    api = zoo.get_api(cfg)
+    shapes = jax.eval_shape(api.init_params, jax.random.PRNGKey(0))
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(shapes))
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); D = tokens the
+    step processes (decode: one token per sequence)."""
+    n = exact_param_count(cfg)
+    if cfg.family == "moe":
+        n = int(n * cfg.n_active_params() / max(cfg.n_params(), 1))
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch  # decode: one new token per seq
+
+
+def build_lowered(cfg, shape, mesh, *, donate: bool = True):
+    """Returns (lowered, meta) for this cell on this mesh."""
+    api = zoo.get_api(cfg)
+    rules = default_rules(mesh, fsdp=cfg.fsdp)
+    specs = zoo.input_specs(cfg, shape)
+    baxes = zoo.batch_axes(cfg, shape)
+    params_shape = jax.eval_shape(api.init_params, jax.random.PRNGKey(0))
+    param_sh = tree_shardings_for(mesh, api.param_axes(), params_shape, rules)
+
+    with use_rules(rules, mesh=mesh):
+        if shape.kind == "train":
+            n_mb, int8 = TRAIN_PRESETS.get(cfg.arch_id, (8, False))
+            n_mb = min(n_mb, shape.global_batch)
+            ocfg = opt.AdamWConfig(int8_moments=int8)
+            state_shape = jax.eval_shape(
+                lambda p: trainer.init_train_state(p, ocfg), params_shape
+            )
+            state_ax = trainer.train_state_axes(api.param_axes(), ocfg)
+            state_sh = tree_shardings_for(mesh, state_ax, state_shape, rules)
+            batch_sh = tree_shardings_for(
+                mesh, baxes["batch"], specs["batch"], rules
+            )
+            step = trainer.make_train_step(
+                api.loss_fn, ocfg, n_microbatch=n_mb, grad_shardings=param_sh
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,) if donate else (),
+            )
+            lowered = jitted.lower(state_shape, specs["batch"])
+            meta = {"step": "train_step", "n_microbatch": n_mb, "int8_moments": int8}
+        elif shape.kind == "prefill":
+            args_sh = tuple(
+                tree_shardings_for(mesh, a, s, rules)
+                for a, s in zip(baxes["args"], specs["args"])
+            )
+            out_shape = jax.eval_shape(api.prefill_fn, params_shape, *specs["args"])
+            cache_sh = tree_shardings_for(
+                mesh,
+                api.cache_axes(shape.global_batch, shape.seq_len),
+                out_shape[1],
+                rules,
+            )
+            jitted = jax.jit(
+                api.prefill_fn,
+                in_shardings=(param_sh,) + args_sh,
+                out_shardings=(None, cache_sh),
+            )
+            lowered = jitted.lower(params_shape, *specs["args"])
+            meta = {"step": "prefill"}
+        else:  # decode
+            cache_sh = tree_shardings_for(
+                mesh,
+                api.cache_axes(shape.global_batch, shape.seq_len),
+                specs["cache"],
+                rules,
+            )
+            tok_sh = tree_shardings_for(mesh, ("batch",), specs["token"], rules)
+            pos_sh = tree_shardings_for(mesh, (), specs["pos"], rules)
+            jitted = jax.jit(
+                api.decode_fn,
+                in_shardings=(param_sh, cache_sh, tok_sh, pos_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(
+                params_shape, specs["cache"], specs["token"], specs["pos"]
+            )
+            meta = {"step": "serve_step(decode)"}
+    return lowered, meta
+
+
+def analyze(lowered, compiled, mesh, cfg, shape) -> dict:
+    n_chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    hlo_text = compiled.as_text()
+    # trip-count-aware accounting (launch/hlo_cost.py): XLA's built-in
+    # cost_analysis counts while bodies ONCE — a 126x error for a scanned
+    # 126-layer model. Both are recorded; the roofline uses the corrected one.
+    acc = hlo_cost.analyze_text(hlo_text)
+    xla_cost = compiled.cost_analysis() or {}
+    flops_pd = float(acc["flops"])
+    bytes_pd = float(acc["bytes"])
+    coll = {k: float(v) for k, v in acc["collective_by_kind"].items()}
+    coll["total"] = float(acc["collective_bytes"])
+    coll["count"] = parse_collective_bytes(hlo_text)["count"]
+    # everything is PER-DEVICE after SPMD partitioning, so the roofline
+    # terms divide by per-chip peaks directly (equivalent to the
+    # total/(chips×peak) formulation).
+    compute_t = flops_pd / PEAK_FLOPS
+    memory_t = bytes_pd / HBM_BW
+    coll_t = coll["total"] / ICI_BW
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+        if mem:
+            mem["live_peak_bytes"] = (
+                mem.get("argument_size_in_bytes", 0)
+                + mem.get("output_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)
+                - mem.get("alias_size_in_bytes", 0)
+            )
+    except Exception as e:  # CPU backend may not expose it
+        mem["error"] = str(e)
+
+    mf = model_flops(cfg, shape)
+    terms = {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+    }
+    dominant = max(terms, key=terms.get)
+    return {
+        "n_chips": n_chips,
+        "flops_per_device": flops_pd,
+        "hbm_bytes_per_device": bytes_pd,
+        "collective_bytes_per_device": coll,
+        "xla_cost_analysis_uncorrected": {
+            "flops": float(xla_cost.get("flops", 0.0)),
+            "bytes_accessed": float(xla_cost.get("bytes accessed", 0.0)),
+        },
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "bound_s": max(terms.values()),
+            "model_flops_total": mf,
+            "useful_flops_ratio": mf / max(flops_pd * n_chips, 1.0),
+        },
+        "memory_analysis": mem,
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             *, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name in cfg.skip_shapes:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skipped",
+               "reason": "full-attention arch: no sub-quadratic path for 500k decode"}
+        _write(out_dir, rec)
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    with mesh:
+        lowered, meta = build_lowered(cfg, shape, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "mesh_shape": {a: int(mesh.shape[a]) for a in mesh.axis_names},
+            "status": "ok", **meta,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            **analyze(lowered, compiled, mesh, cfg, shape),
+        }
+    if verbose:
+        print(f"== {arch} x {shape_name} x {mesh_kind} ==")
+        print(json.dumps(rec["memory_analysis"], indent=1))
+        print(json.dumps({k: rec[k] for k in ("flops_per_device", "hbm_bytes_per_device")}, indent=1))
+        print("collectives:", json.dumps(rec["collective_bytes_per_device"]))
+        print("roofline:", json.dumps(rec["roofline"], indent=1))
+    _write(out_dir, rec)
+    return rec
+
+
+def _write(out_dir: str, rec: dict):
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="run each cell in its own process (isolates failures)")
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        for mk in meshes:
+            if args.subprocess and args.all:
+                r = subprocess.run(
+                    [sys.executable, "-m", "repro.launch.dryrun",
+                     "--arch", arch, "--shape", shape, "--mesh", mk, "--out", args.out],
+                    capture_output=True, text=True,
+                )
+                status = "ok" if r.returncode == 0 else "FAIL"
+                print(f"[{status}] {arch} x {shape} x {mk}")
+                if r.returncode != 0:
+                    print(r.stdout[-2000:], r.stderr[-2000:])
+                    failures.append((arch, shape, mk))
+            else:
+                try:
+                    run_cell(arch, shape, mk, args.out)
+                except Exception:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mk))
+                finally:
+                    jax.clear_caches()
+    if failures:
+        print("FAILED cells:", failures)
+        sys.exit(1)
+    print(f"all {len(cells) * len(meshes)} cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (smoke tests and benches must keep seeing the
+single real CPU device; only launch/dryrun.py requests 512 placeholder
+host devices via XLA_FLAGS before any jax import)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) over 256 chips (one TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) over 512 chips — the 'pod' axis
+    composes with 'data' for hierarchical gradient reduction (DCN hop)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over however many local devices exist (tests/examples)."""
+    types = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((n_data, n_model), ("data", "model"), axis_types=types)

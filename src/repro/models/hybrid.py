@@ -1,0 +1,256 @@
+"""zamba2-style hybrid: stacks of Mamba2 layers with a SHARED attention
+block (one parameter set, applied every `attn_every` layers — zamba2's
+parameter-sharing trick).
+
+Layout: n_super super-layers, each = `attn_every` mamba layers + one
+application of the shared attention block; `n_tail` trailing mamba layers
+make up the remainder (81 = 13·6 + 3 for zamba2-7b with attn_every=6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models import transformer as tfm
+
+
+def split_layers(cfg: LMConfig) -> tuple[int, int]:
+    n_super = cfg.n_layers // cfg.attn_every
+    n_tail = cfg.n_layers - n_super * cfg.attn_every
+    return n_super, n_tail
+
+
+def init_params(key, cfg: LMConfig) -> dict:
+    n_super, n_tail = split_layers(cfg)
+    ke, km, kt, ka = jax.random.split(key, 4)
+    mk = jax.random.split(km, n_super * cfg.attn_every).reshape(n_super, cfg.attn_every, 2)
+    stack = jax.vmap(jax.vmap(lambda k: mamba2.mamba_init(k, cfg)))(mk)
+    p = {
+        "embed": L.embed_init(ke, cfg),
+        "mamba": stack,  # (n_super, attn_every, ...)
+        "shared_attn": tfm.layer_init(ka, cfg),  # ONE block, reused
+    }
+    if n_tail:
+        tk = jax.random.split(kt, n_tail)
+        p["tail"] = jax.vmap(lambda k: mamba2.mamba_init(k, cfg))(tk)
+    return p
+
+
+def param_axes(cfg: LMConfig) -> dict:
+    n_super, n_tail = split_layers(cfg)
+    m_axes = jax.tree_util.tree_map(
+        lambda axes: ("layers", None) + axes,
+        mamba2.mamba_axes(cfg),
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+    p = {
+        "embed": L.embed_axes(cfg),
+        "mamba": m_axes,
+        "shared_attn": tfm.layer_axes(cfg),
+    }
+    if n_tail:
+        p["tail"] = jax.tree_util.tree_map(
+            lambda axes: ("layers",) + axes,
+            mamba2.mamba_axes(cfg),
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x),
+        )
+    return p
+
+
+class HybridCache(NamedTuple):
+    mamba: mamba2.MambaState  # stacked (n_super, attn_every, ...)
+    tail: Optional[mamba2.MambaState]  # stacked (n_tail, ...)
+    attn_k: jax.Array  # (n_super, B, S, kv, hd)
+    attn_v: jax.Array
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> HybridCache:
+    n_super, n_tail = split_layers(cfg)
+
+    def stacked_state(*lead):
+        st = mamba2.init_state(cfg, batch)
+        return mamba2.MambaState(
+            h=jnp.zeros(lead + st.h.shape, jnp.float32),
+            conv=jnp.zeros(lead + st.conv.shape, jnp.float32),
+        )
+
+    kv_shape = (n_super, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return HybridCache(
+        mamba=stacked_state(n_super, cfg.attn_every),
+        tail=stacked_state(n_tail) if n_tail else None,
+        attn_k=jnp.zeros(kv_shape, dtype),
+        attn_v=jnp.zeros(kv_shape, dtype),
+    )
+
+
+def forward(
+    params,
+    tokens,
+    cfg: LMConfig,
+    *,
+    cache: Optional[HybridCache] = None,
+    cache_pos=None,
+    collect_kv: bool = False,
+):
+    """Returns (logits, new_cache | None)."""
+    collect_kv = collect_kv or cache is not None
+    x = L.embed_tokens(tokens, params["embed"])
+    b, s, _ = x.shape
+    base = cache_pos if cache_pos is not None else 0
+    if cache_pos is not None and jnp.ndim(cache_pos) == 1:
+        base = cache_pos[:, None]  # per-slot positions (continuous batching)
+    positions = base + jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    n_super, n_tail = split_layers(cfg)
+    shared = params["shared_attn"]
+
+    def super_body(carry, xs):
+        h = carry
+        mp, mstate, kv_l = xs
+        new_states = []
+        for j in range(cfg.attn_every):
+            lp_j = jax.tree_util.tree_map(lambda a: a[j], mp)
+            st_j = (
+                mamba2.MambaState(h=mstate.h[j], conv=mstate.conv[j])
+                if mstate is not None
+                else None
+            )
+            h, ns = mamba2.mamba_forward(h, lp_j, cfg, state=st_j)
+            new_states.append(ns)
+        kv = tfm.KVSlice_or_none(kv_l)
+        h, new_kv = tfm.dense_block(
+            h, shared, cfg, positions=positions, kv=kv, cache_pos=cache_pos
+        )
+        stacked = mamba2.MambaState(
+            h=jnp.stack([st.h for st in new_states]),
+            conv=jnp.stack([st.conv for st in new_states]),
+        )
+        h = shd.constrain_act(h, ("batch", "act_seq", None))  # SP stash
+        out = (stacked, new_kv if collect_kv else None)
+        return h, out
+
+    if cfg.remat:
+        super_body = jax.checkpoint(super_body, prevent_cse=False)
+
+    mstates = cache.mamba if cache is not None else None
+    kv_in = (cache.attn_k, cache.attn_v) if cache is not None else None
+    x, (new_mstates, new_kv) = jax.lax.scan(
+        super_body, x, (params["mamba"], mstates, kv_in)
+    )
+
+    new_tail = None
+    if n_tail:
+        tail_states = []
+        for j in range(n_tail):
+            lp_j = jax.tree_util.tree_map(lambda a: a[j], params["tail"])
+            st_j = (
+                mamba2.MambaState(h=cache.tail.h[j], conv=cache.tail.conv[j])
+                if cache is not None
+                else None
+            )
+            x, ns = mamba2.mamba_forward(x, lp_j, cfg, state=st_j)
+            tail_states.append(ns)
+        new_tail = mamba2.MambaState(
+            h=jnp.stack([t.h for t in tail_states]),
+            conv=jnp.stack([t.conv for t in tail_states]),
+        )
+
+    logits = L.logits_fn(x, params["embed"], cfg)
+    new_cache = None
+    if collect_kv:
+        new_cache = HybridCache(
+            mamba=new_mstates,
+            tail=new_tail,
+            attn_k=new_kv.k if new_kv is not None else None,
+            attn_v=new_kv.v if new_kv is not None else None,
+        )
+    return logits, new_cache
+
+
+# ------------------------------------------------- serve fast path (§Perf) --
+# Same carry-aliased trick as transformer.cached_forward: the decode step
+# carries the whole HybridCache through a fori_loop over super-layers and
+# updates states/KV in place (token-granular for the shared-attention KV),
+# instead of scan-stacking new caches (which copies the full per-super KV
+# every super-layer — 4x the true traffic at long_500k).
+
+
+def cached_decode(params, token, cfg: LMConfig, cache: HybridCache, pos):
+    """token (B,) int32, pos scalar/(B,). Returns (logits (B,V), cache)."""
+    x = L.embed_tokens(token[:, None], params["embed"])
+    b = x.shape[0]
+    base = pos[:, None] if jnp.ndim(pos) == 1 else pos
+    positions = jnp.broadcast_to(base + jnp.zeros((b, 1), jnp.int32), (b, 1))
+    n_super, n_tail = split_layers(cfg)
+    shared = params["shared_attn"]
+    s_max = cache.attn_k.shape[2]
+
+    def super_body(i, carry):
+        x, mh, mconv, kc, vc = carry
+        mp_i = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            params["mamba"],
+        )
+        for j in range(cfg.attn_every):
+            lp_j = jax.tree_util.tree_map(lambda a: a[j], mp_i)
+            st_j = mamba2.MambaState(
+                h=jax.lax.dynamic_index_in_dim(mh, i, 0, keepdims=False)[j],
+                conv=jax.lax.dynamic_index_in_dim(mconv, i, 0, keepdims=False)[j],
+            )
+            x, ns = mamba2.mamba_forward(x, lp_j, cfg, state=st_j)
+            mh = mh.at[i, j].set(ns.h.astype(mh.dtype))
+            mconv = mconv.at[i, j].set(ns.conv.astype(mconv.dtype))
+
+        # shared attention block over the carried KV (token-granular write)
+        h = L.rmsnorm(x, shared["ln1"], cfg.norm_eps)
+        q, k, v = L._qkv(h, shared["attn"], cfg, positions)
+        if jnp.ndim(pos) == 0:
+            from repro.distributed import kvops
+
+            kc = kvops.cache_write(kc, k, i, pos)
+            vc = kvops.cache_write(vc, v, i, pos)
+        else:
+            rows = jnp.arange(b)[:, None]
+            cols = pos[:, None]
+            kc = kc.at[i, rows, cols].set(k.astype(kc.dtype))
+            vc = vc.at[i, rows, cols].set(v.astype(vc.dtype))
+        kv_axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+        kc = shd.constrain_act(kc, kv_axes)
+        vc = shd.constrain_act(vc, kv_axes)
+        k_l = jax.lax.dynamic_index_in_dim(kc, i, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(vc, i, 0, keepdims=False)
+        off = pos[:, None, None] if jnp.ndim(pos) == 1 else pos
+        valid = jnp.arange(s_max)[None, None, :] <= (off + jnp.zeros((1, 1, 1), jnp.int32))
+        att = L._sdpa(q, k_l, v_l, valid[:, None], cfg)
+        x = x + att @ shared["attn"]["wo"]
+        x = x + L.mlp(L.rmsnorm(x, shared["ln2"], cfg.norm_eps), shared["mlp"])
+        return (x, mh, mconv, kc, vc)
+
+    x, mh, mconv, kc, vc = jax.lax.fori_loop(
+        0, n_super, super_body,
+        (x, cache.mamba.h, cache.mamba.conv, cache.attn_k, cache.attn_v),
+    )
+
+    new_tail = cache.tail
+    if n_tail:
+        th, tconv = cache.tail.h, cache.tail.conv
+        for j in range(n_tail):
+            lp_j = jax.tree_util.tree_map(lambda a: a[j], params["tail"])
+            st_j = mamba2.MambaState(h=th[j], conv=tconv[j])
+            x, ns = mamba2.mamba_forward(x, lp_j, cfg, state=st_j)
+            th = th.at[j].set(ns.h.astype(th.dtype))
+            tconv = tconv.at[j].set(ns.conv.astype(tconv.dtype))
+        new_tail = mamba2.MambaState(h=th, conv=tconv)
+
+    logits = L.logits_fn(x, params["embed"], cfg)
+    new_cache = HybridCache(
+        mamba=mamba2.MambaState(h=mh, conv=mconv), tail=new_tail,
+        attn_k=kc, attn_v=vc,
+    )
+    return logits[:, 0], new_cache

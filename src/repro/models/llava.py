@@ -1,0 +1,64 @@
+"""llava-next style VLM: dense LM backbone + anyres patch-embedding stub.
+
+Per the assignment, the vision tower is a STUB: input_specs() supplies
+precomputed patch features (B, n_patches, d_vision). The real model parts
+are the multimodal projector (2-layer MLP, llava-1.6 convention) and the
+full LM backbone (models/transformer.py). Patch embeddings are prepended
+to the token embeddings; LM loss is computed on the token suffix only.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import layers as L
+from repro.models import transformer as tfm
+
+D_VISION = 1024  # CLIP-L/14 feature width (stub frontend output)
+
+
+def init_params(key, cfg: LMConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = tfm.init_params(k1, cfg)
+    p["mm_proj"] = {
+        "w1": L._init(k2, (D_VISION, cfg.d_model), cfg.param_dtype),
+        "w2": L._init(k3, (cfg.d_model, cfg.d_model), cfg.param_dtype),
+    }
+    return p
+
+
+def param_axes(cfg: LMConfig) -> dict:
+    a = tfm.param_axes(cfg)
+    a["mm_proj"] = {"w1": (None, "embed"), "w2": ("embed", "embed2")}
+    return a
+
+
+def project_patches(params, patches: jax.Array) -> jax.Array:
+    """(B, P, D_VISION) stub features → (B, P, d_model) LM embeddings."""
+    p = params["mm_proj"]
+    h = jax.nn.gelu(patches.astype(p["w1"].dtype) @ p["w1"])
+    return h @ p["w2"]
+
+
+def make_loss_fn(cfg: LMConfig):
+    base = tfm.make_loss_fn(cfg)
+
+    def loss_fn(params, batch):
+        embeds = project_patches(params, batch["patches"])
+        return base(params, {**batch, "extra_embeds": embeds})
+
+    return loss_fn
+
+
+def make_prefill_fn(cfg: LMConfig):
+    def prefill(params, tokens, patches):
+        embeds = project_patches(params, patches)
+        logits, cache = tfm.forward(
+            params, tokens, cfg, extra_embeds=embeds, collect_kv=True
+        )
+        return logits[:, -1], cache
+
+    return prefill

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD) blocks for the zamba2-7b hybrid.
+
+The SSM recurrence  h_t = a_t · h_{t-1} + dt_t · B_t ⊗ x_t,  y_t = C_t · h_t
+is a data-dependent leaky integrator — structurally the paper's LIF membrane
+update without the threshold (DESIGN.md §4), and it reuses the same
+scan-over-time substrate.
+
+Training/prefill use the CHUNKED SSD form (intra-chunk masked matmuls on the
+MXU + inter-chunk state scan) rather than a per-step scan — the TPU-native
+formulation. Decode is the single-step recurrence on a carried state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models import layers as L
+
+CONV_K = 4  # depthwise causal conv width (mamba2 default)
+
+
+def d_inner(cfg: LMConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_ssm_heads(cfg: LMConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def mamba_init(key, cfg: LMConfig) -> dict:
+    d = cfg.d_model
+    di = d_inner(cfg)
+    nh = n_ssm_heads(cfg)
+    ds = cfg.ssm_state
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 6)
+    # in_proj → [z, x, B, C, dt]
+    proj_out = di + di + ds + ds + nh
+    return {
+        "in_proj": L._init(ks[0], (d, proj_out), dt),
+        "conv_w": L._init(ks[1], (CONV_K, di + 2 * ds), dt, scale=0.5),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_norm": jnp.ones((di,), dt),
+        "out_proj": L._init(ks[2], (di, d), dt),
+        "ln": jnp.ones((d,), dt),
+    }
+
+
+def mamba_axes(cfg: LMConfig) -> dict:
+    return {
+        "in_proj": ("embed", "mlp"),
+        "conv_w": ("conv_k", "mlp"),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "out_norm": ("mlp",),
+        "out_proj": ("mlp", "embed"),
+        "ln": (None,),
+    }
+
+
+class MambaState(NamedTuple):
+    h: jax.Array  # (B, nh, head_dim, d_state) SSM state
+    conv: jax.Array  # (B, CONV_K-1, di + 2*ds) conv tail
+
+
+def init_state(cfg: LMConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    di = d_inner(cfg)
+    return MambaState(
+        h=jnp.zeros((batch, n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state), dtype),
+        conv=jnp.zeros((batch, CONV_K - 1, di + 2 * cfg.ssm_state), dtype),
+    )
+
+
+def _split_proj(xz, cfg: LMConfig):
+    di = d_inner(cfg)
+    ds = cfg.ssm_state
+    nh = n_ssm_heads(cfg)
+    z = xz[..., :di]
+    xbc = xz[..., di : di + di + 2 * ds]
+    dt = xz[..., di + di + 2 * ds :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_state=None):
+    """Depthwise causal conv1d. xbc (B, T, C); returns (out, new_tail)."""
+    b, t, c = xbc.shape
+    if conv_state is None:
+        pad = jnp.zeros((b, CONV_K - 1, c), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (B, T+K-1, C)
+    out = sum(xp[:, i : i + t, :] * conv_w[i][None, None] for i in range(CONV_K))
+    return jax.nn.silu(out), xp[:, -(CONV_K - 1) :, :]
+
+
+def _ssd_chunked(xh, dt, a_log, b_in, c_in, d_skip, h0, *, chunk: int = 128):
+    """Chunked SSD. Shapes:
+      xh (B, T, nh, hd)  dt (B, T, nh)  b_in/c_in (B, T, ds)
+      h0 (B, nh, hd, ds).  Returns (y (B,T,nh,hd), h_final).
+    Scalar-per-head decay a_t = exp(-exp(a_log) * dt_t).
+    """
+    B, T, nh, hd = xh.shape
+    ds = b_in.shape[-1]
+    nc = T // chunk
+    assert T % chunk == 0, (T, chunk)
+    # fold into chunks
+    xc = xh.reshape(B, nc, chunk, nh, hd)
+    dtc = dt.reshape(B, nc, chunk, nh)
+    bc = b_in.reshape(B, nc, chunk, ds)
+    cc = c_in.reshape(B, nc, chunk, ds)
+
+    neg_a = -jnp.exp(a_log)[None, None, None]  # (1,1,1,nh)
+    log_a = neg_a * dtc  # (B, nc, chunk, nh) log decay per step
+    s = jnp.cumsum(log_a, axis=2)  # within-chunk cumulative log decay
+
+    # intra-chunk: Y[t] = Σ_{i<=t} C_t·B_i · e^{s_t - s_i} · dt_i x_i.
+    # Factor e^{s_t - s_i} = e^{s_t}·e^{-s_i} so only the (t, i) score matrix
+    # is materialized (never a (t, i, nh) decay tensor): flash-style memory.
+    cb = jnp.einsum("bnts,bnis->bnti", cc, bc)  # (B,nc,chunk,chunk)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None]
+    cb = jnp.where(tri, cb, 0.0)
+    e_pos = jnp.exp(jnp.clip(s, -60.0, 0.0))  # e^{s_t}   (B,nc,chunk,nh)
+    e_neg = jnp.exp(jnp.clip(-s, 0.0, 60.0))  # e^{-s_i}
+    x_tilde = xc * (e_neg * dtc)[..., None]  # (B,nc,chunk,nh,hd)
+    y_intra = jnp.einsum("bnti,bnihd->bnthd", cb, x_tilde) * e_pos[..., None]
+
+    # chunk-level state update: h' = e^{s_last} h + Σ_i e^{s_last - s_i} dt_i B_i⊗x_i
+    s_last = s[:, :, -1:, :]  # (B,nc,1,nh)
+    rdecay = jnp.exp(jnp.clip(s_last - s, -60.0, 0.0))  # (B,nc,chunk,nh)
+    u = jnp.einsum("bnth,bnthd,bnts->bnhds", dtc * rdecay, xc, bc)  # per-chunk injection
+
+    chunk_decay = jnp.exp(jnp.clip(s_last[:, :, 0, :], -60.0, 0.0))  # (B,nc,nh)
+
+    def scan_fn(h, inp):
+        cd, uc = inp  # cd (B,nh), uc (B,nh,hd,ds)
+        h_new = h * cd[:, :, None, None] + uc
+        return h_new, h
+
+    (h_final, h_prevs) = jax.lax.scan(
+        scan_fn,
+        h0,
+        (chunk_decay.transpose(1, 0, 2), u.transpose(1, 0, 2, 3, 4)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # (B,nc,nh,hd,ds)
+
+    # inter-chunk contribution: y_t += C_t · e^{s_t} h_chunk_start
+    e_s = jnp.exp(jnp.clip(s, -60.0, 0.0))  # (B,nc,chunk,nh)
+    y_inter = jnp.einsum("bnts,bnhds,bnth->bnthd", cc, h_prevs, e_s)
+
+    y = (y_intra + y_inter).reshape(B, T, nh, hd)
+    y = y + d_skip[None, None, :, None] * xh
+    return y, h_final
+
+
+def mamba_forward(x, p, cfg: LMConfig, *, state: Optional[MambaState] = None, chunk=128):
+    """x (B, T, D) → (out, new_state). Works for T=1 decode (uses the
+    recurrence) and T>1 train/prefill (chunked SSD)."""
+    b, t, d = x.shape
+    nh, hd, ds = n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    xz = h @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(xz, cfg)
+    conv_in_state = state.conv if state is not None else None
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], conv_in_state)
+    di = d_inner(cfg)
+    xh = xbc[..., :di].reshape(b, t, nh, hd).astype(jnp.float32)
+    b_in = xbc[..., di : di + ds].astype(jnp.float32)
+    c_in = xbc[..., di + ds :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None])  # (B,T,nh)
+
+    h0 = state.h if state is not None else jnp.zeros((b, nh, hd, ds), jnp.float32)
+
+    if t == 1:  # decode: one recurrence step
+        a = jnp.exp(-jnp.exp(p["A_log"])[None, :] * dt[:, 0])  # (B, nh)
+        inj = jnp.einsum("bh,bhd,bs->bhds", dt[:, 0], xh[:, 0], b_in[:, 0])
+        h_new = h0 * a[:, :, None, None] + inj
+        y = jnp.einsum("bs,bhds->bhd", c_in[:, 0], h_new)
+        y = y + p["D"][None, :, None] * xh[:, 0]
+        y = y[:, None]  # (B,1,nh,hd)
+        h_final = h_new
+    else:
+        pad = (-t) % chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+            c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+        y, h_final = _ssd_chunked(xh, dt, p["A_log"], b_in, c_in, p["D"], h0, chunk=chunk)
+        y = y[:, :t]
+
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = L.rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_state = MambaState(h=h_final, conv=conv_tail.astype(jnp.float32))
+    return x + out, new_state

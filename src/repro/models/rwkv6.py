@@ -1,0 +1,280 @@
+"""RWKV6 "Finch" (attention-free, data-dependent decay) — rwkv6-3b.
+
+Time-mix recurrence per head (state S ∈ R^{hd×hd}):
+    y_t = r_t · (diag(u)·k_t v_tᵀ + S_t)
+    S_{t+1} = diag(w_t) · S_t + k_t v_tᵀ
+with data-dependent per-channel decay w_t = exp(-exp(w0 + tanh(x W_a) W_b)).
+
+The decay-accumulate structure is again the paper's leaky-integrator family
+(LIF without threshold; DESIGN.md §4). Training runs a CHUNKED scan: within
+a chunk the contribution is an attention-like masked matmul with decay
+weights; the state hops chunk to chunk — same skeleton as mamba2's SSD, so
+long-context decode stays O(1) memory in sequence length.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+
+HEAD_DIM = 64
+LORA_R = 64
+
+
+def n_heads(cfg: LMConfig) -> int:
+    return cfg.d_model // HEAD_DIM
+
+
+def rwkv_init(key, cfg: LMConfig) -> dict:
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": jnp.ones((d,), dt),
+        "ln2": jnp.ones((d,), dt),
+        # time-mix interpolation factors (token shift)
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt),
+        "mu_g": jnp.full((d,), 0.5, dt),
+        "mu_w": jnp.full((d,), 0.5, dt),
+        "w_r": L._init(ks[0], (d, d), dt),
+        "w_k": L._init(ks[1], (d, d), dt),
+        "w_v": L._init(ks[2], (d, d), dt),
+        "w_g": L._init(ks[3], (d, d), dt),
+        "w_o": L._init(ks[4], (d, d), dt),
+        # data-dependent decay LoRA
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w_a": L._init(ks[5], (d, LORA_R), dt),
+        "w_b": L._init(ks[6], (LORA_R, d), dt),
+        "u": jnp.zeros((d,), jnp.float32),  # bonus for current token
+        "gn": jnp.ones((d,), dt),  # group-norm weight on the head outputs
+        # channel-mix
+        "mu_cr": jnp.full((d,), 0.5, dt),
+        "mu_ck": jnp.full((d,), 0.5, dt),
+        "c_r": L._init(ks[7], (d, d), dt),
+        "c_k": L._init(ks[8], (d, cfg.d_ff), dt),
+        "c_v": L._init(ks[9], (cfg.d_ff, d), dt),
+    }
+
+
+def rwkv_axes(cfg: LMConfig) -> dict:
+    vec = (None,)
+    mat = ("embed", "heads")
+    return {
+        "ln1": vec, "ln2": vec,
+        "mu_r": vec, "mu_k": vec, "mu_v": vec, "mu_g": vec, "mu_w": vec,
+        "w_r": mat, "w_k": mat, "w_v": mat, "w_g": mat, "w_o": ("heads", "embed"),
+        "w0": vec, "w_a": ("embed", None), "w_b": (None, "heads"), "u": vec, "gn": vec,
+        "mu_cr": vec, "mu_ck": vec,
+        "c_r": ("embed", "heads"), "c_k": ("embed", "mlp"), "c_v": ("mlp", "embed"),
+    }
+
+
+class RWKVState(NamedTuple):
+    s: jax.Array  # (B, H, hd, hd) wkv state
+    x_tm: jax.Array  # (B, D) last token (time-mix shift)
+    x_cm: jax.Array  # (B, D) last token (channel-mix shift)
+
+
+def init_state(cfg: LMConfig, batch: int) -> RWKVState:
+    h = n_heads(cfg)
+    return RWKVState(
+        s=jnp.zeros((batch, h, HEAD_DIM, HEAD_DIM), jnp.float32),
+        x_tm=jnp.zeros((batch, cfg.d_model), jnp.float32),
+        x_cm=jnp.zeros((batch, cfg.d_model), jnp.float32),
+    )
+
+
+def _shift(x, last):
+    """Token shift: x_{t-1} with carried boundary. x (B,T,D), last (B,D)."""
+    return jnp.concatenate([last[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _wkv_chunked(r, k, v, w, u, s0, *, chunk: int = 64):
+    """Chunked WKV6. r/k/v (B,T,H,hd), w (B,T,H,hd) decay in (0,1),
+    s0 (B,H,hd,hd). Returns (y (B,T,H,hd), s_final).
+
+    Recurrence: S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ ;
+                y_t = rᵀ_t (S_{t-1} + diag(u)·k_t v_tᵀ).
+    (state BEFORE this token's injection + a 'bonus' diagonal term.)
+    """
+    B, T, H, hd = r.shape
+    nc = T // chunk
+    assert T % chunk == 0
+    rc = r.reshape(B, nc, chunk, H, hd)
+    kc = k.reshape(B, nc, chunk, H, hd)
+    vc = v.reshape(B, nc, chunk, H, hd)
+    logw = jnp.log(jnp.clip(w, 1e-8, 1.0)).reshape(B, nc, chunk, H, hd)
+    sw = jnp.cumsum(logw, axis=2)  # inclusive cumulative log decay
+
+    # intra-chunk: the decay applied to an injection at i, observed at t
+    # (t > i), is prod_{j=i+1..t} w_j = e^{sw_t - sw_i}. Factor it as
+    # (r_t ∘ e^{sw_t}) · (k_i ∘ e^{-sw_i}) so the contraction over hd is a
+    # matmul and only the (t, i, H) score tensor is materialized.
+    r_tilde = rc * jnp.exp(jnp.clip(sw, -60.0, 0.0))
+    k_tilde = kc * jnp.exp(jnp.clip(-sw, 0.0, 60.0))
+    scores = jnp.einsum("bnthd,bnihd->bntih", r_tilde, k_tilde)  # (B,nc,t,i,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)[None, None, :, :, None]
+    scores = jnp.where(tri, scores, 0.0)
+    y_intra = jnp.einsum("bntih,bnihd->bnthd", scores, vc)
+    # current-token bonus: y_t += (r_t ∘ u ∘ k_t)·v_t
+    bonus = jnp.sum(rc * u[None, None, None] * kc, axis=-1)  # (B,nc,t,H)
+    y_intra = y_intra + bonus[..., None] * vc
+
+    # chunk state: S' = diag(e^{sw_last}) S + Σ_i diag(e^{sw_last - sw_i}) k_i v_iᵀ
+    sw_last = sw[:, :, -1:]  # (B,nc,1,H,hd)
+    rdec = jnp.exp(jnp.clip(sw_last - sw, -60.0, 0.0))  # (B,nc,chunk,H,hd)
+    inj = jnp.einsum("bnthd,bntho->bnhdo", kc * rdec, vc)  # (B,nc,H,hd,hd)
+    cdec = jnp.exp(jnp.clip(sw_last[:, :, 0], -60.0, 0.0))  # (B,nc,H,hd)
+
+    def scan_fn(s, inp):
+        cd, ic = inp  # cd (B,H,hd), ic (B,H,hd,hd)
+        s_new = s * cd[..., None] + ic
+        return s_new, s
+
+    s_final, s_prevs = jax.lax.scan(
+        scan_fn, s0, (cdec.transpose(1, 0, 2, 3), inj.transpose(1, 0, 2, 3, 4))
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)  # (B,nc,H,hd,hd)
+
+    # inter-chunk: y_t += (r_t ∘ e^{sw_{t-1}+logw_t ... }) — decay from chunk
+    # start to t applied to the carried state: prod_{j<=t} w_j = e^{sw_t}
+    esw = jnp.exp(jnp.clip(sw, -60.0, 0.0))  # (B,nc,t,H,hd)
+    y_inter = jnp.einsum("bnthd,bnhdo->bntho", rc * esw, s_prevs)
+
+    y = (y_intra + y_inter).reshape(B, T, H, hd)
+    return y, s_final
+
+
+def time_mix(x, p, cfg: LMConfig, state: Optional[RWKVState], *, chunk: int = 64):
+    b, t, d = x.shape
+    H = n_heads(cfg)
+    last = state.x_tm if state is not None else jnp.zeros((b, d))
+    xs = _shift(x, last)
+
+    def lerp(mu):
+        return x + (xs - x) * mu[None, None]
+
+    r = (lerp(p["mu_r"]) @ p["w_r"]).reshape(b, t, H, HEAD_DIM).astype(jnp.float32)
+    k = (lerp(p["mu_k"]) @ p["w_k"]).reshape(b, t, H, HEAD_DIM).astype(jnp.float32)
+    v = (lerp(p["mu_v"]) @ p["w_v"]).reshape(b, t, H, HEAD_DIM).astype(jnp.float32)
+    g = jax.nn.silu(lerp(p["mu_g"]) @ p["w_g"])
+    wln = p["w0"][None, None] + jnp.tanh(
+        lerp(p["mu_w"]).astype(jnp.float32) @ p["w_a"].astype(jnp.float32)
+    ) @ p["w_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wln)).reshape(b, t, H, HEAD_DIM)  # decay ∈ (0,1)
+    u = p["u"].reshape(H, HEAD_DIM)
+
+    s0 = state.s if state is not None else jnp.zeros((b, H, HEAD_DIM, HEAD_DIM))
+    if t == 1:  # decode recurrence
+        r1, k1, v1, w1 = r[:, 0], k[:, 0], v[:, 0], w[:, 0]
+        y = jnp.einsum("bhd,bhdo->bho", r1, s0) + jnp.sum(
+            r1 * u[None] * k1, axis=-1, keepdims=True
+        ) * v1
+        s_final = s0 * w1[..., None] + jnp.einsum("bhd,bho->bhdo", k1, v1)
+        y = y[:, None]  # (B,1,H,hd)
+    else:
+        pad = (-t) % chunk
+        if pad:
+            r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        y, s_final = _wkv_chunked(r, k, v, w, u, s0, chunk=chunk)
+        y = y[:, :t]
+
+    y = y.reshape(b, t, d)
+    y = L.rmsnorm(y.astype(x.dtype), p["gn"], cfg.norm_eps) * g
+    out = y @ p["w_o"]
+    return out, s_final, x[:, -1].astype(jnp.float32)
+
+
+def channel_mix(x, p, state: Optional[RWKVState]):
+    b, t, d = x.shape
+    last = state.x_cm if state is not None else jnp.zeros((b, d))
+    xs = _shift(x, last)
+    xr = x + (xs - x) * p["mu_cr"][None, None]
+    xk = x + (xs - x) * p["mu_ck"][None, None]
+    rr = jax.nn.sigmoid(xr @ p["c_r"])
+    kk = jnp.square(jax.nn.relu(xk @ p["c_k"]))
+    return rr * (kk @ p["c_v"]), x[:, -1].astype(jnp.float32)
+
+
+def rwkv_block(x, lp, cfg: LMConfig, *, state: Optional[RWKVState] = None, chunk: int = 64):
+    """Full RWKV6 layer. Returns (x, new_state)."""
+    h, s_new, tm_last = time_mix(L.rmsnorm(x, lp["ln1"], cfg.norm_eps), lp, cfg, state, chunk=chunk)
+    x = x + h
+    h2, cm_last = channel_mix(L.rmsnorm(x, lp["ln2"], cfg.norm_eps), lp, state)
+    x = x + h2
+    return x, RWKVState(s=s_new, x_tm=tm_last, x_cm=cm_last)
+
+
+# ------------------------------------------------------------- full model --
+
+
+def init_params(key, cfg: LMConfig) -> dict:
+    ke, kl = jax.random.split(key)
+    keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: rwkv_init(k, cfg))(keys)
+    return {"embed": L.embed_init(ke, cfg), "layers": layers}
+
+
+def param_axes(cfg: LMConfig) -> dict:
+    lx = jax.tree_util.tree_map(
+        lambda axes: ("layers",) + axes,
+        rwkv_axes(cfg),
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+    return {"embed": L.embed_axes(cfg), "layers": lx}
+
+
+def init_cache(cfg: LMConfig, batch: int) -> RWKVState:
+    """Stacked-over-layers recurrent state — O(1) in sequence length, which
+    is why rwkv6 runs the long_500k shape."""
+    st = init_state(cfg, batch)
+    L_ = cfg.n_layers
+    return RWKVState(
+        s=jnp.zeros((L_,) + st.s.shape, jnp.float32),
+        x_tm=jnp.zeros((L_,) + st.x_tm.shape, jnp.float32),
+        x_cm=jnp.zeros((L_,) + st.x_cm.shape, jnp.float32),
+    )
+
+
+def forward(
+    params,
+    tokens,
+    cfg: LMConfig,
+    *,
+    state: Optional[RWKVState] = None,
+    collect_state: bool = False,
+    chunk: int = 64,
+):
+    """tokens (B, T) → (logits, new_state|None). Scan over stacked layers."""
+    collect_state = collect_state or state is not None
+    x = L.embed_tokens(tokens, params["embed"])
+
+    def body(h, xs):
+        if state is not None:
+            lp, st_l = xs
+            st = RWKVState(*st_l)
+        else:
+            lp, st = xs, None
+        h, ns = rwkv_block(h, lp, cfg, state=st, chunk=chunk)
+        h = shd.constrain_act(h, ("batch", "act_seq", None))  # SP stash
+        return h, (tuple(ns) if collect_state else None)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    xs = (params["layers"], tuple(state)) if state is not None else params["layers"]
+    x, ns = jax.lax.scan(body, x, xs)
+    logits = L.logits_fn(x, params["embed"], cfg)
+    new_state = RWKVState(*ns) if ns is not None else None
+    return logits, new_state

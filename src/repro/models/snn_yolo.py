@@ -1,0 +1,379 @@
+"""The paper's SNN object-detection network (§II, Fig 1/2) + ANN/QNN/BNN
+baselines (Table II).
+
+Topology (inferred — Fig 1 gives the block diagram but not channel counts;
+our channel plan reproduces Table I's 3.17M parameters within 0.5% and
+Fig 15's operation counts within ~20%, see benchmarks/table1_ablation.py):
+
+  encode conv 3×3   3→16   @1024×576  (ANN encoding layer, in_T=1, out_T=1)
+  maxpool
+  conv block  3×3  16→32   @512×288   (in_T=1, out_T=3 — mixed time steps)
+  maxpool
+  basic block  32→32       @256×144   (CSP, Fig 2b)
+  maxpool
+  basic block  32→64       @128×72
+  maxpool
+  basic block  64→128      @64×36
+  maxpool
+  basic block 128→256      @32×18
+  basic block 256→256      @32×18
+  output conv 1×1 256→40   @32×18     (no-reset membrane accumulation,
+                                       averaged over T; YOLOv2 head:
+                                       5 anchors × (5 + 3 classes))
+
+Basic block (Fig 2b, CSPNet-style):
+  shortcut: 1×1 cin→cout/2                      (tdBN + LIF)
+  main:     1×1 cin→cout → 3×3 cout→cout ×2     (tdBN + LIF each)
+  concat(main, shortcut) → 1×1 1.5·cout→cout    (tdBN + LIF)
+
+LIF: threshold 0.5, leak 0.25, hard reset. All tensors NHWC; time leads:
+(T, N, H, W, C).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import block_conv as bc
+from repro.core import energy as en
+from repro.core import lif as lifm
+from repro.core import pruning, quant
+from repro.core import spike_conv as sc
+
+Mode = Literal["snn", "ann", "qnn", "bnn"]
+
+
+@dataclass(frozen=True)
+class SNNDetConfig:
+    arch_id: str = "snn-det"
+    input_hw: tuple = (576, 1024)
+    num_classes: int = 3
+    num_anchors: int = 5
+    stem_channels: int = 16
+    conv_block_channels: int = 32
+    # basic blocks: (cin, cout) pairs; pooling before each of the first 3
+    stage_channels: tuple = ((32, 32), (32, 64), (64, 128), (128, 256), (256, 256))
+    # how many stages have a maxpool in front (the rest run at final res)
+    pooled_stages: int = 4
+    full_t: int = 3
+    threshold: float = 0.5
+    leak: float = 0.25
+    mode: Mode = "snn"
+    act_bits: int = 4  # QNN activation precision (Table II sweeps 2/3/4)
+    weight_bits: int = 8  # 0 = float weights
+    use_block_conv: bool = False
+    # in_T per LIF-producing macro layer: encode, conv_block, stages...
+    mixed_time: bool = True
+
+    @property
+    def head_channels(self) -> int:
+        return self.num_anchors * (5 + self.num_classes)
+
+    @property
+    def grid_hw(self) -> tuple:
+        return (self.input_hw[0] // 32, self.input_hw[1] // 32)
+
+
+# ----------------------------------------------------------------- params --
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout), dtype) * np.sqrt(2.0 / fan_in)
+    return w
+
+
+def _bn_init(c):
+    return {"gamma": jnp.ones((c,)), "beta": jnp.zeros((c,))}
+
+
+def _bn_state(c):
+    return {"mean": jnp.zeros((c,)), "var": jnp.ones((c,)), "count": jnp.zeros((), jnp.int32)}
+
+
+def init_params(key, cfg: SNNDetConfig):
+    """Returns (params, bn_state) pytrees."""
+    keys = iter(jax.random.split(key, 64))
+    p: dict[str, Any] = {}
+    s: dict[str, Any] = {}
+
+    def conv_bn(name, kh, kw, cin, cout):
+        p[name] = {"w": _conv_init(next(keys), kh, kw, cin, cout), **_bn_init(cout)}
+        s[name] = _bn_state(cout)
+
+    conv_bn("encode", 3, 3, 3, cfg.stem_channels)
+    conv_bn("conv_block", 3, 3, cfg.stem_channels, cfg.conv_block_channels)
+    for i, (cin, cout) in enumerate(cfg.stage_channels):
+        half = cout // 2
+        conv_bn(f"stage{i}/shortcut", 1, 1, cin, half)
+        conv_bn(f"stage{i}/main_in", 1, 1, cin, cout)
+        conv_bn(f"stage{i}/main_a", 3, 3, cout, cout)
+        conv_bn(f"stage{i}/main_b", 3, 3, cout, cout)
+        conv_bn(f"stage{i}/agg", 1, 1, cout + half, cout)
+    p["head"] = {"w": _conv_init(next(keys), 1, 1, cfg.stage_channels[-1][1], cfg.head_channels)}
+    return p, s
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------- forward --
+
+
+def _conv(x, w, cfg: SNNDetConfig):
+    if cfg.use_block_conv and w.shape[0] > 1:
+        return bc.block_conv2d(x, w)
+    return bc.conv2d(x, w)
+
+
+def _maybe_quant_w(w, cfg: SNNDetConfig):
+    if cfg.weight_bits and cfg.mode != "bnn":
+        return quant.fake_quant_tensor(w, cfg.weight_bits)
+    if cfg.mode == "bnn":
+        # binary weights, scaled by mean magnitude (XNOR-style)
+        scale = jnp.mean(jnp.abs(w))
+        return jnp.sign(w) * scale
+    return w
+
+
+def _tdbn(x_t, layer_p, layer_s, cfg, train):
+    """x_t: (T, N, H, W, C) — tdBN pools stats over (T, N, H, W)."""
+    params = lifm.TdBNParams(gamma=layer_p["gamma"], beta=layer_p["beta"])
+    state = lifm.TdBNState(mean=layer_s["mean"], var=layer_s["var"], count=layer_s["count"])
+    y, new_state = lifm.tdbn_apply(
+        params, state, x_t, threshold=cfg.threshold, training=train
+    )
+    return y, {"mean": new_state.mean, "var": new_state.var, "count": new_state.count}
+
+
+def _activation(y_t, cfg: SNNDetConfig):
+    """Post-norm nonlinearity per model family. y_t: (T, N, H, W, C)."""
+    if cfg.mode == "snn":
+        spikes, _ = lifm.lif_over_time(y_t, threshold=cfg.threshold, leak=cfg.leak)
+        return spikes
+    if cfg.mode == "ann":
+        return jax.nn.relu(y_t)
+    if cfg.mode == "qnn":
+        act = jax.nn.relu(y_t)
+        qmax = 2**cfg.act_bits - 1
+        scale = jnp.maximum(jnp.max(act), 1e-6) / qmax
+        return quant.fake_quant(act, scale)
+    if cfg.mode == "bnn":
+        return lifm.spike_fn(y_t, 0.0)  # sign-ish binary activation w/ STE
+    raise ValueError(cfg.mode)
+
+
+def _conv_bn_act(x_t, layer_p, layer_s, cfg, train, *, out_t=None):
+    """Conv (per time step) → tdBN → activation.
+
+    Mixed time steps: if out_t > x_t.shape[0] == 1, the conv result is
+    computed ONCE and broadcast to out_t steps before the LIF (paper §II-A).
+    """
+    w = _maybe_quant_w(layer_p["w"], cfg)
+    y_t = jax.vmap(lambda x: _conv(x, w, cfg))(x_t)
+    if out_t is not None and out_t != y_t.shape[0]:
+        assert y_t.shape[0] == 1, "can only broadcast from T=1"
+        y_t = jnp.broadcast_to(y_t, (out_t,) + y_t.shape[1:])
+    y_t, new_s = _tdbn(y_t, layer_p, layer_s, cfg, train)
+    return _activation(y_t, cfg), new_s
+
+
+def _maxpool_t(x_t):
+    """2×2 spike max-pool == OR gate (paper's max-pooling module)."""
+    return jax.vmap(
+        lambda x: jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    )(x_t)
+
+
+def forward(params, bn_state, images, cfg: SNNDetConfig, *, train: bool = False):
+    """images: (N, H, W, 3) in [0, 1]. Returns (head, new_bn_state, aux).
+
+    head: (N, gh, gw, anchors, 5 + classes) raw predictions.
+    aux["spikes"]: per-macro-layer spike tensors for mIoUT analysis.
+    """
+    full_t = 1 if cfg.mode != "snn" else cfg.full_t
+    new_state = dict(bn_state)
+    aux: dict[str, Any] = {"spikes": {}}
+
+    x = images.astype(jnp.float32)
+    x_t = x[None]  # encoding layer sees the raw image once (in_T = 1)
+
+    # --- encode (ANN layer: fires once) ---
+    s_t, new_state["encode"] = _conv_bn_act(x_t, params["encode"], bn_state["encode"], cfg, train)
+    aux["spikes"]["encode"] = s_t
+    s_t = _maxpool_t(s_t)
+
+    # --- conv block: in_T=1, out_T=full_t (mixed time steps) ---
+    out_t = full_t if cfg.mixed_time else s_t.shape[0]
+    if not cfg.mixed_time and cfg.mode == "snn":
+        # non-mixed baseline: replicate the input spikes to full_t steps
+        s_t = jnp.broadcast_to(s_t, (full_t,) + s_t.shape[1:])
+        out_t = full_t
+    s_t, new_state["conv_block"] = _conv_bn_act(
+        s_t, params["conv_block"], bn_state["conv_block"], cfg, train, out_t=out_t
+    )
+    aux["spikes"]["conv_block"] = s_t
+    s_t = _maxpool_t(s_t)
+
+    # --- CSP basic blocks ---
+    for i in range(len(cfg.stage_channels)):
+        name = f"stage{i}"
+        short, new_state[f"{name}/shortcut"] = _conv_bn_act(
+            s_t, params[f"{name}/shortcut"], bn_state[f"{name}/shortcut"], cfg, train
+        )
+        m, new_state[f"{name}/main_in"] = _conv_bn_act(
+            s_t, params[f"{name}/main_in"], bn_state[f"{name}/main_in"], cfg, train
+        )
+        m, new_state[f"{name}/main_a"] = _conv_bn_act(
+            m, params[f"{name}/main_a"], bn_state[f"{name}/main_a"], cfg, train
+        )
+        m, new_state[f"{name}/main_b"] = _conv_bn_act(
+            m, params[f"{name}/main_b"], bn_state[f"{name}/main_b"], cfg, train
+        )
+        cat = jnp.concatenate([m, short], axis=-1)
+        s_t, new_state[f"{name}/agg"] = _conv_bn_act(
+            cat, params[f"{name}/agg"], bn_state[f"{name}/agg"], cfg, train
+        )
+        aux["spikes"][name] = s_t
+        if i < cfg.pooled_stages - 1:
+            s_t = _maxpool_t(s_t)
+
+    # --- output conv: accumulate membrane with no reset, average over T ---
+    w_head = _maybe_quant_w(params["head"]["w"], cfg)
+    y_t = jax.vmap(lambda x: bc.conv2d(x, w_head))(s_t)
+    if cfg.mode == "snn":
+        head = lifm.membrane_readout(y_t, leak=cfg.leak)
+    else:
+        head = jnp.mean(y_t, axis=0)
+    n, gh, gw, _ = head.shape
+    head = head.reshape(n, gh, gw, cfg.num_anchors, 5 + cfg.num_classes)
+    return head, new_state, aux
+
+
+# ------------------------------------------------------- layer accounting --
+
+
+# Per-layer post-pruning densities of the 3×3 kernels, shaped like paper
+# Fig 3: a single global magnitude threshold keeps far more weights in the
+# small early layers than in the large late ones. Calibrated so the model
+# reproduces BOTH Table I (−70% params) and §IV-E (−47.3% ops) jointly.
+FIG3_DENSITY_PROFILE = {
+    "encode": 0.70,
+    "conv_block": 0.70,
+    "stage0": 0.70,
+    "stage1": 0.50,
+    "stage2": 0.50,
+    "stage3": 0.12,
+    "stage4": 0.12,
+}
+
+
+def layer_specs(
+    cfg: SNNDetConfig, *, pruned_density: float | dict | None = None
+) -> list[en.ConvLayerSpec]:
+    """The network as a ConvLayerSpec list for the §IV-D/E energy model.
+
+    density applies to 3×3 kernels only (paper prunes only those at 80%).
+    ``pruned_density``: None → Fig 3 profile; float → uniform; dict →
+    per-group override. Time steps follow the (1, full_t) mixed schedule.
+    """
+    H, W = cfg.input_hw
+    t = cfg.full_t
+    specs: list[en.ConvLayerSpec] = []
+    if pruned_density is None:
+        profile = FIG3_DENSITY_PROFILE
+    elif isinstance(pruned_density, dict):
+        profile = pruned_density
+    else:
+        profile = {k: pruned_density for k in FIG3_DENSITY_PROFILE}
+
+    specs.append(
+        en.ConvLayerSpec(
+            "encode", H, W, 3, cfg.stem_channels, 3, 1, 1, bits_in=8, density=profile["encode"]
+        )
+    )
+    h, w = H // 2, W // 2
+    specs.append(
+        en.ConvLayerSpec(
+            "conv_block",
+            h,
+            w,
+            cfg.stem_channels,
+            cfg.conv_block_channels,
+            3,
+            1,
+            t,
+            density=profile["conv_block"],
+        )
+    )
+    h, w = h // 2, w // 2
+    for i, (cin, cout) in enumerate(cfg.stage_channels):
+        half = cout // 2
+        d3 = profile[f"stage{i}"]
+        specs += [
+            en.ConvLayerSpec(f"stage{i}/shortcut", h, w, cin, half, 1, t, t),
+            en.ConvLayerSpec(f"stage{i}/main_in", h, w, cin, cout, 1, t, t),
+            en.ConvLayerSpec(f"stage{i}/main_a", h, w, cout, cout, 3, t, t, density=d3),
+            en.ConvLayerSpec(f"stage{i}/main_b", h, w, cout, cout, 3, t, t, density=d3),
+            en.ConvLayerSpec(f"stage{i}/agg", h, w, cout + half, cout, 1, t, t),
+        ]
+        if i < cfg.pooled_stages - 1:
+            h, w = h // 2, w // 2
+    gh, gw = cfg.grid_hw
+    specs.append(
+        en.ConvLayerSpec(
+            "head", gh, gw, cfg.stage_channels[-1][1], cfg.head_channels, 1, t, t, bits_out=8
+        )
+    )
+    return specs
+
+
+# ------------------------------------------------------------- YOLOv2 head -
+
+
+def decode_head(head, anchors, *, threshold=None):
+    """YOLOv2 box decode. head: (N, gh, gw, A, 5+C) raw.
+    Returns (boxes_xywh [0-1 normalized], obj, class_probs)."""
+    txy = jax.nn.sigmoid(head[..., 0:2])
+    twh = head[..., 2:4]
+    obj = jax.nn.sigmoid(head[..., 4])
+    cls = jax.nn.softmax(head[..., 5:], axis=-1)
+    n, gh, gw, a, _ = head.shape
+    gy, gx = jnp.meshgrid(jnp.arange(gh), jnp.arange(gw), indexing="ij")
+    cx = (gx[None, :, :, None] + txy[..., 0]) / gw
+    cy = (gy[None, :, :, None] + txy[..., 1]) / gh
+    anchors = jnp.asarray(anchors)  # (A, 2) in grid-cell units
+    bw = anchors[:, 0] * jnp.exp(twh[..., 0]) / gw
+    bh = anchors[:, 1] * jnp.exp(twh[..., 1]) / gh
+    boxes = jnp.stack([cx, cy, bw, bh], axis=-1)
+    return boxes, obj, cls
+
+
+DEFAULT_ANCHORS = ((1.0, 1.0), (2.0, 2.0), (4.0, 2.5), (2.5, 4.0), (6.0, 6.0))
+
+
+def yolo_loss(head, targets, anchors=DEFAULT_ANCHORS, *, l_coord=5.0, l_noobj=0.5):
+    """YOLOv2-style loss. targets: (N, gh, gw, A, 5+C) with
+    [tx, ty, tw, th, obj, onehot-classes]; obj∈{0,1} marks assigned anchors.
+    tx/ty are within-cell offsets in (0,1); tw/th are log-scale vs anchor."""
+    obj_mask = targets[..., 4]
+    noobj_mask = 1.0 - obj_mask
+    pxy = jax.nn.sigmoid(head[..., 0:2])
+    pwh = head[..., 2:4]
+    pobj = jax.nn.sigmoid(head[..., 4])
+    plog = jax.nn.log_softmax(head[..., 5:], axis=-1)
+
+    coord = jnp.sum(obj_mask[..., None] * ((pxy - targets[..., 0:2]) ** 2 + (pwh - targets[..., 2:4]) ** 2))
+    obj_l = jnp.sum(obj_mask * (pobj - 1.0) ** 2)
+    noobj_l = jnp.sum(noobj_mask * pobj**2)
+    cls_l = -jnp.sum(obj_mask[..., None] * targets[..., 5:] * plog)
+    n = head.shape[0]
+    return (l_coord * coord + obj_l + l_noobj * noobj_l + cls_l) / n

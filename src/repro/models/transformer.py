@@ -1,0 +1,339 @@
+"""Dense decoder-only transformer (qwen / llama / llava backbone) with
+scan-over-layers: params are stacked (L, ...) so HLO size and compile time
+are depth-independent — a 126-layer 405B lowers as one scanned layer.
+
+Also hosts the generic train/prefill/decode steps reused by the MoE, hybrid
+and SSM families (they swap the per-layer body)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+
+
+# ------------------------------------------------------------------ params --
+
+
+def layer_init(key, cfg: LMConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": L.attn_init(k1, cfg),
+        "mlp": L.mlp_init(k2, cfg),
+        "ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def layer_axes(cfg: LMConfig) -> dict:
+    return {
+        "attn": L.attn_axes(cfg),
+        "mlp": L.mlp_axes(cfg),
+        "ln1": (None,),
+        "ln2": (None,),
+    }
+
+
+def init_params(key, cfg: LMConfig, layer_init_fn=layer_init) -> dict:
+    ke, kl = jax.random.split(key)
+    if cfg.scan_layers:
+        keys = jax.random.split(kl, cfg.n_layers)
+        layers = jax.vmap(lambda k: layer_init_fn(k, cfg))(keys)
+    else:
+        layers = [layer_init_fn(k, cfg) for k in jax.random.split(kl, cfg.n_layers)]
+    return {"embed": L.embed_init(ke, cfg), "layers": layers}
+
+
+def param_axes(cfg: LMConfig, layer_axes_fn=layer_axes) -> dict:
+    lx = jax.tree_util.tree_map(
+        lambda axes: ("layers",) + axes,
+        layer_axes_fn(cfg),
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+    if not cfg.scan_layers:
+        lx = [lx] * cfg.n_layers
+    return {"embed": L.embed_axes(cfg), "layers": lx}
+
+
+# ----------------------------------------------------------------- forward --
+
+
+def dense_block(x, lp, cfg: LMConfig, *, positions, kv=None, cache_pos=None, causal=True):
+    """Pre-norm attention + SwiGLU block. Returns (x, new_kv)."""
+    h, new_kv = L.attention(
+        L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
+        lp["attn"],
+        cfg,
+        positions=positions,
+        causal=causal,
+        kv_cache=kv,
+        cache_pos=cache_pos,
+    )
+    x = x + h
+    x = x + L.mlp(L.rmsnorm(x, lp["ln2"], cfg.norm_eps), lp["mlp"])
+    return x, new_kv
+
+
+class KVCache(NamedTuple):
+    """Stacked over layers: k/v (L, B, S_max, n_kv, hd)."""
+
+    k: jax.Array
+    v: jax.Array
+
+    @staticmethod
+    def zeros(cfg: LMConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,
+    cfg: LMConfig,
+    *,
+    block_fn: Callable = dense_block,
+    positions: Optional[jax.Array] = None,
+    kv_cache: Optional[KVCache] = None,
+    cache_pos: Optional[jax.Array] = None,
+    extra_embeds: Optional[jax.Array] = None,
+    collect_kv: bool = False,
+) -> tuple[jax.Array, Optional[KVCache]]:
+    """tokens (B, S) int32 → logits (B, S, V). Scan over stacked layers.
+
+    collect_kv: return the per-layer K/V (prefill/decode). MUST stay False
+    for training — a scanned KV output materializes (L, B, S, KV, hd).
+    extra_embeds: (B, P, D) prepended modality embeddings (llava patches).
+    """
+    collect_kv = collect_kv or kv_cache is not None
+    x = L.embed_tokens(tokens, params["embed"])
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    if positions is None:
+        base = cache_pos if cache_pos is not None else 0
+        if cache_pos is not None and jnp.ndim(cache_pos) == 1:
+            base = cache_pos[:, None]  # per-slot positions (continuous batching)
+        positions = base + jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    if cfg.scan_layers:
+        def body(carry, layer_in):
+            h = carry
+            lp, kv_l = layer_in
+            kv = KVSlice_or_none(kv_l)
+            h, new_kv = block_fn(h, lp, cfg, positions=positions, kv=kv, cache_pos=cache_pos)
+            # sequence-parallel layer boundary: the remat stash (this carry)
+            # is seq-sharded over 'model' when the launcher enables it
+            h = shd.constrain_act(h, ("batch", "act_seq", None))
+            return h, (new_kv if collect_kv else None)
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        kv_in = (kv_cache.k, kv_cache.v) if kv_cache is not None else None
+        xs = (params["layers"], kv_in)
+        x, kv_out = jax.lax.scan(body, x, xs)
+        new_cache = KVCache(*kv_out) if kv_out is not None and kv_out[0] is not None else None
+    else:
+        new_ks, new_vs = [], []
+        for i, lp in enumerate(params["layers"]):
+            kv = (
+                L.KVSlice(kv_cache.k[i], kv_cache.v[i]) if kv_cache is not None else None
+            )
+            x, new_kv = block_fn(x, lp, cfg, positions=positions, kv=kv, cache_pos=cache_pos)
+            if new_kv is not None and collect_kv:
+                new_ks.append(new_kv.k)
+                new_vs.append(new_kv.v)
+        new_cache = (
+            KVCache(jnp.stack(new_ks), jnp.stack(new_vs)) if new_ks else None
+        )
+
+    logits = L.logits_fn(x, params["embed"], cfg)
+    return logits, new_cache
+
+
+def KVSlice_or_none(kv_l):
+    if kv_l is None or kv_l[0] is None:
+        return None
+    return L.KVSlice(kv_l[0], kv_l[1])
+
+
+# ------------------------------------------------------------- step makers --
+
+
+def make_loss_fn(cfg: LMConfig, block_fn=dense_block):
+    def loss_fn(params, batch):
+        logits, _ = forward(
+            params,
+            batch["tokens"],
+            cfg,
+            block_fn=block_fn,
+            extra_embeds=batch.get("extra_embeds"),
+        )
+        # modality prefixes carry no LM loss
+        labels = batch["labels"]
+        if "extra_embeds" in batch and batch["extra_embeds"] is not None:
+            logits = logits[:, -labels.shape[1] :]
+        return L.cross_entropy(logits[:, :-1], labels[:, 1:])
+
+    return loss_fn
+
+
+def make_prefill_fn(cfg: LMConfig, block_fn=dense_block, max_seq: Optional[int] = None):
+    """Prefill: run the prompt, return logits + populated KV cache."""
+
+    def prefill(params, tokens, extra_embeds=None):
+        logits, cache = forward(
+            params, tokens, cfg, block_fn=block_fn, extra_embeds=extra_embeds, collect_kv=True
+        )
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def make_decode_fn(cfg: LMConfig, block_fn=dense_block):
+    """One decode step: (params, cache, token, pos) → (logits, cache)."""
+
+    def decode(params, cache, token, pos):
+        logits, new_cache = forward(
+            params,
+            token[:, None],
+            cfg,
+            block_fn=block_fn,
+            kv_cache=cache,
+            cache_pos=pos,
+        )
+        return logits[:, 0], new_cache
+
+    return decode
+
+
+# ------------------------------------------------- serve fast path (§Perf) --
+# The scan-based forward() above stacks per-layer KV as scan OUTPUTS, which
+# XLA cannot alias with the input cache inside the while state — the HLO
+# carries ~3 full-cache copies PER LAYER at decode (measured: qwen1.5-0.5b
+# decode_32k moves 332 GB/step/chip; EXPERIMENTS.md §Perf). The serve path
+# below instead CARRIES the stacked cache through a fori_loop and updates it
+# in place with token/layer-granular dynamic_update_slice — while-state
+# buffers alias, so the only cache traffic left is the true KV read.
+#
+# Optional int8 KV (cfg via `kv_quant`): the paper's FXP8 quantization
+# applied to the cache — per-(token, head) scales, dequantized inside the
+# attention read. Halves KV bytes (the decode memory term) again.
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV + per-(layer, batch, pos, head) f32 scales."""
+
+    k: jax.Array  # (L, B, S, kv, hd) int8
+    v: jax.Array
+    k_scale: jax.Array  # (L, B, S, kv) f32
+    v_scale: jax.Array
+
+    @staticmethod
+    def zeros(cfg: LMConfig, batch: int, max_seq: int):
+        shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+        sshape = shape[:-1]
+        return QuantKVCache(
+            jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+            jnp.zeros(sshape, jnp.float32), jnp.zeros(sshape, jnp.float32),
+        )
+
+
+def _q8_kv(x):
+    """(..., hd) -> int8 payload + f32 scale over the head dim."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.round(x.astype(jnp.float32) / jnp.maximum(scale[..., None], 1e-9))
+    return q.astype(jnp.int8), scale
+
+
+def cached_forward(
+    params: dict,
+    tokens: jax.Array,  # (B, S_new) — S_new=1 for decode, prompt len for prefill
+    cfg: LMConfig,
+    cache,  # KVCache or QuantKVCache, (L, B, S_max, kv, hd)
+    pos0,  # scalar or (B,) int32: write offset of tokens[:, 0]
+    *,
+    mlp_fn: Callable = None,
+    extra_embeds: Optional[jax.Array] = None,
+):
+    """Prefill/decode over a carried stacked cache. Returns
+    (last-position logits (B, V), updated cache)."""
+    mlp_fn = mlp_fn or (lambda h, lp: L.mlp(h, lp["mlp"]))
+    quant = isinstance(cache, QuantKVCache)
+    x = L.embed_tokens(tokens, params["embed"])
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    base = pos0[:, None] if jnp.ndim(pos0) == 1 else pos0
+    positions = base + jnp.arange(s)[None]
+    positions = jnp.broadcast_to(positions, (b, s))
+    s_max = cache.k.shape[2]
+
+    def body(i, carry):
+        x, cache = carry
+        lp = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            params["layers"],
+        )
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L._qkv(h, lp["attn"], cfg, positions)
+
+        # token-granular in-place write into the carried cache; on a
+        # seq-sharded cache the write goes through the shard-local
+        # ownership-checked path (distributed/kvops.py)
+        def put(buf, val):
+            if jnp.ndim(pos0) == 0:  # uniform offset
+                from repro.distributed import kvops
+
+                return kvops.cache_write(buf, val, i, pos0)
+            rows = jnp.arange(b)[:, None]  # per-slot offsets (serving)
+            cols = pos0[:, None] + jnp.arange(s)[None]
+            return buf.at[i, rows, cols].set(val.astype(buf.dtype))
+
+        kv_axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+        if quant:
+            kq, ks = _q8_kv(k)
+            vq, vs = _q8_kv(v)
+            cache = QuantKVCache(
+                shd.constrain_act(put(cache.k, kq), kv_axes),
+                shd.constrain_act(put(cache.v, vq), kv_axes),
+                shd.constrain_act(put(cache.k_scale, ks), kv_axes[:-1]),
+                shd.constrain_act(put(cache.v_scale, vs), kv_axes[:-1]),
+            )
+            k_l = (
+                jax.lax.dynamic_index_in_dim(cache.k, i, 0, keepdims=False).astype(jnp.bfloat16)
+                * jax.lax.dynamic_index_in_dim(cache.k_scale, i, 0, keepdims=False)[..., None].astype(jnp.bfloat16)
+            )
+            v_l = (
+                jax.lax.dynamic_index_in_dim(cache.v, i, 0, keepdims=False).astype(jnp.bfloat16)
+                * jax.lax.dynamic_index_in_dim(cache.v_scale, i, 0, keepdims=False)[..., None].astype(jnp.bfloat16)
+            )
+        else:
+            cache = KVCache(
+                shd.constrain_act(put(cache.k, k), kv_axes),
+                shd.constrain_act(put(cache.v, v), kv_axes),
+            )
+            k_l = jax.lax.dynamic_index_in_dim(cache.k, i, 0, keepdims=False)
+            v_l = jax.lax.dynamic_index_in_dim(cache.v, i, 0, keepdims=False)
+
+        if s == s_max and jnp.ndim(pos0) == 0 and s > L.CHUNKED_ATTN_THRESHOLD:
+            # long prefill: flash-style chunked path (pos0 must be 0 for the
+            # causal mask to be exact — prefill always starts at 0)
+            att = L._chunked_sdpa(q, k_l, v_l, cfg, causal=True)
+        else:
+            # visibility: kv position j attends to query step t iff j <= pos0+t
+            off = pos0[:, None, None] if jnp.ndim(pos0) == 1 else pos0
+            valid = jnp.arange(s_max)[None, None, :] <= (off + jnp.arange(s)[None, :, None])
+            att = L._sdpa(q, k_l, v_l, valid[:, None], cfg)
+        x = x + att @ lp["attn"]["wo"]
+        x = x + mlp_fn(L.rmsnorm(x, lp["ln2"], cfg.norm_eps), lp)
+        return (x, cache)
+
+    x, cache = jax.lax.fori_loop(0, cfg.n_layers, body, (x, cache))
+    logits = L.logits_fn(x[:, -1:], params["embed"], cfg)
+    return logits[:, 0], cache

@@ -1,0 +1,207 @@
+"""Whisper-style encoder–decoder backbone (whisper-small). The conv audio
+frontend is a STUB per the assignment: `input_specs()` supplies precomputed
+frame embeddings (B, encoder_seq, d_model); everything downstream (encoder
+self-attention, decoder causal + cross attention) is real.
+
+MLPs are 2-matrix GELU (whisper convention) rather than SwiGLU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+from repro.models import transformer as tfm
+
+
+def gelu_mlp_init(key, cfg: LMConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": L._init(k1, (cfg.d_model, cfg.d_ff), cfg.param_dtype),
+        "wo": L._init(k2, (cfg.d_ff, cfg.d_model), cfg.param_dtype),
+    }
+
+
+def gelu_mlp_axes(cfg):
+    return {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+
+
+def gelu_mlp(x, p):
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo"]
+
+
+def enc_layer_init(key, cfg: LMConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": L.attn_init(k1, cfg),
+        "mlp": gelu_mlp_init(k2, cfg),
+        "ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def enc_layer_axes(cfg):
+    return {
+        "attn": L.attn_axes(cfg),
+        "mlp": gelu_mlp_axes(cfg),
+        "ln1": (None,),
+        "ln2": (None,),
+    }
+
+
+def dec_layer_init(key, cfg: LMConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_attn": L.attn_init(k1, cfg),
+        "cross_attn": L.attn_init(k2, cfg),
+        "mlp": gelu_mlp_init(k3, cfg),
+        "ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "ln_x": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def dec_layer_axes(cfg):
+    return {
+        "self_attn": L.attn_axes(cfg),
+        "cross_attn": L.attn_axes(cfg),
+        "mlp": gelu_mlp_axes(cfg),
+        "ln1": (None,),
+        "ln_x": (None,),
+        "ln2": (None,),
+    }
+
+
+def init_params(key, cfg: LMConfig) -> dict:
+    ke, kenc, kdec = jax.random.split(key, 3)
+    enc_keys = jax.random.split(kenc, cfg.encoder_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": L.embed_init(ke, cfg),
+        "encoder": jax.vmap(lambda k: enc_layer_init(k, cfg))(enc_keys),
+        "decoder": jax.vmap(lambda k: dec_layer_init(k, cfg))(dec_keys),
+    }
+
+
+def param_axes(cfg: LMConfig) -> dict:
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda axes: ("layers",) + axes,
+            tree,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x),
+        )
+
+    return {
+        "embed": L.embed_axes(cfg),
+        "encoder": stack(enc_layer_axes(cfg)),
+        "decoder": stack(dec_layer_axes(cfg)),
+    }
+
+
+def encode(params, frames, cfg: LMConfig):
+    """frames: (B, S_enc, D) stub frontend output → encoder states."""
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(h, lp):
+        a, _ = L.attention(
+            L.rmsnorm(h, lp["ln1"], cfg.norm_eps),
+            lp["attn"],
+            cfg,
+            positions=positions,
+            causal=False,
+        )
+        h = h + a
+        h = h + gelu_mlp(L.rmsnorm(h, lp["ln2"], cfg.norm_eps), lp["mlp"])
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, frames.astype(cfg.param_dtype), params["encoder"])
+    return h
+
+
+class WhisperCache(NamedTuple):
+    self_k: jax.Array  # (L, B, S_max, kv, hd)
+    self_v: jax.Array
+    cross_k: jax.Array  # (L, B, S_enc, kv, hd) — fixed after prefill
+    cross_v: jax.Array
+
+
+def cross_kv(params, enc_out, cfg: LMConfig):
+    """Precompute per-decoder-layer cross-attention K/V from encoder out."""
+    b, s, _ = enc_out.shape
+
+    def body(_, lp):
+        p = lp["cross_attn"]
+        k = (enc_out @ p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+        v = (enc_out @ p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+        if cfg.qkv_bias:
+            k = k + p["bk"].reshape(cfg.n_kv_heads, cfg.hd)
+            v = v + p["bv"].reshape(cfg.n_kv_heads, cfg.hd)
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, None, params["decoder"])
+    return ks, vs
+
+
+def decoder_forward(
+    params,
+    tokens,
+    cfg: LMConfig,
+    cross: tuple,  # (L, B, S_enc, kv, hd) ×2
+    *,
+    cache: Optional[WhisperCache] = None,
+    cache_pos=None,
+    collect_kv: bool = False,
+):
+    collect_kv = collect_kv or cache is not None
+    x = L.embed_tokens(tokens, params["embed"])
+    b, s, _ = x.shape
+    base = cache_pos if cache_pos is not None else 0
+    if cache_pos is not None and jnp.ndim(cache_pos) == 1:
+        base = cache_pos[:, None]  # per-slot positions (continuous batching)
+    positions = base + jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(h, xs):
+        lp, kv_l, (ck, cv) = xs
+        kv = tfm.KVSlice_or_none(kv_l)
+        a, new_kv = L.attention(
+            L.rmsnorm(h, lp["ln1"], cfg.norm_eps),
+            lp["self_attn"],
+            cfg,
+            positions=positions,
+            causal=True,
+            kv_cache=kv,
+            cache_pos=cache_pos,
+        )
+        h = h + a
+        c, _ = L.attention(
+            L.rmsnorm(h, lp["ln_x"], cfg.norm_eps),
+            lp["cross_attn"],
+            cfg,
+            positions=positions,
+            cross_kv=L.KVSlice(ck, cv),
+        )
+        h = h + c
+        h = h + gelu_mlp(L.rmsnorm(h, lp["ln2"], cfg.norm_eps), lp["mlp"])
+        h = shd.constrain_act(h, ("batch", "act_seq", None))  # SP stash
+        return h, (new_kv if collect_kv else None)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    kv_in = (cache.self_k, cache.self_v) if cache is not None else None
+    x, new_kv = jax.lax.scan(body, x, (params["decoder"], kv_in, cross))
+    logits = L.logits_fn(x, params["embed"], cfg)
+    new_cache = None
+    if collect_kv and new_kv is not None:
+        # scan stacked the per-layer KVSlice → fields are (L, B, S, kv, hd)
+        new_cache = WhisperCache(
+            self_k=new_kv.k, self_v=new_kv.v, cross_k=cross[0], cross_v=cross[1]
+        )
+    return logits, new_cache

@@ -1,0 +1,337 @@
+"""Unified model API over every assigned architecture family.
+
+``get_api(cfg)`` returns a ModelAPI with the same five entry points for all
+families (dense / moe / hybrid / ssm / vlm / audio):
+
+    init_params(key)                  -> params pytree
+    param_axes()                      -> logical-axis pytree (same structure)
+    loss_fn(params, batch)            -> scalar loss          [train shapes]
+    prefill_fn(params, *inputs)       -> (logits, cache)      [prefill shapes]
+    decode_fn(params, cache, tok, pos)-> (logits, cache)      [decode shapes]
+    init_cache(batch, max_seq)        -> cache pytree
+    cache_axes(batch, max_seq)        -> logical-axis pytree for the cache
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins for every
+model input of that (arch x shape) cell — weak-type-correct, shardable, no
+device allocation — which is what launch/dryrun.py lowers against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, ShapeSpec
+from repro.models import hybrid as hyb
+from repro.models import layers as L
+from repro.models import llava
+from repro.models import moe
+from repro.models import rwkv6
+from repro.models import transformer as tfm
+from repro.models import whisper
+
+
+class ModelAPI(NamedTuple):
+    cfg: LMConfig
+    init_params: Callable
+    param_axes: Callable
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+    init_cache: Callable  # (batch, max_seq) -> cache
+    cache_axes: Callable  # (batch, max_seq) -> logical axes pytree
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _axes_like(template: Any, axes_fn: Callable[[Any], tuple]) -> Any:
+    return jax.tree_util.tree_map(lambda leaf: axes_fn(leaf), template)
+
+
+# --------------------------------------------------------------- families --
+
+
+def _dense_api(cfg: LMConfig, block_fn=tfm.dense_block, layer_init=tfm.layer_init,
+               layer_ax=tfm.layer_axes, mlp_fn=None) -> ModelAPI:
+    def init_cache(batch, max_seq, dtype=jnp.bfloat16):
+        if cfg.kv_quant:
+            return tfm.QuantKVCache.zeros(cfg, batch, max_seq)
+        return tfm.KVCache.zeros(cfg, batch, max_seq, dtype)
+
+    def cache_axes(batch, max_seq):
+        kv = ("layers", "batch", "kv_seq", "kv_heads", None)
+        if cfg.kv_quant:
+            sc = ("layers", "batch", "kv_seq", "kv_heads")
+            return tfm.QuantKVCache(kv, kv, sc, sc)
+        return tfm.KVCache(kv, kv)
+
+    def decode(params, cache, token, pos):
+        if cfg.serve_fast:  # carry-aliased fori_loop path (§Perf OPT1/OPT3)
+            return tfm.cached_forward(
+                params, token[:, None], cfg, cache, pos, mlp_fn=mlp_fn
+            )
+        fn = tfm.make_decode_fn(cfg, block_fn)
+        return fn(params, cache, token, pos)
+
+    def prefill(params, tokens, extra_embeds=None):
+        if cfg.serve_fast:
+            b = tokens.shape[0]
+            s = tokens.shape[1] + (extra_embeds.shape[1] if extra_embeds is not None else 0)
+            cache = init_cache(b, s)
+            # pos0 as a STATIC 0: the full-range cache writes lower to
+            # constant-start updates (no GSPMD dynamic-write masks)
+            return tfm.cached_forward(
+                params, tokens, cfg, cache, 0,
+                mlp_fn=mlp_fn, extra_embeds=extra_embeds,
+            )
+        return tfm.make_prefill_fn(cfg, block_fn)(params, tokens, extra_embeds)
+
+    return ModelAPI(
+        cfg=cfg,
+        init_params=lambda key: tfm.init_params(key, cfg, layer_init),
+        param_axes=lambda: tfm.param_axes(cfg, layer_ax),
+        loss_fn=tfm.make_loss_fn(cfg, block_fn),
+        prefill_fn=prefill,
+        decode_fn=decode,
+        init_cache=init_cache,
+        cache_axes=cache_axes,
+    )
+
+
+def _moe_mlp_fn(cfg):
+    def f(h, lp):
+        out, _aux = moe.moe_mlp_ep(h, lp["moe"], cfg)
+        return out
+
+    return f
+
+
+def _moe_api(cfg: LMConfig) -> ModelAPI:
+    # moe_block_ep routes each device's tokens to its LOCAL experts inside
+    # shard_map (§Perf OPT6); it falls back to the jnp-level dispatch when
+    # no mesh context is installed (CPU tests, single device)
+    return _dense_api(cfg, moe.moe_block_ep, moe.moe_layer_init, moe.moe_layer_axes,
+                      mlp_fn=_moe_mlp_fn(cfg))
+
+
+def _vlm_api(cfg: LMConfig) -> ModelAPI:
+    base = _dense_api(cfg)
+
+    def prefill(params, tokens, patches):
+        embeds = llava.project_patches(params, patches)
+        return base.prefill_fn(params, tokens, embeds)
+
+    return base._replace(
+        init_params=lambda key: llava.init_params(key, cfg),
+        param_axes=lambda: llava.param_axes(cfg),
+        loss_fn=llava.make_loss_fn(cfg),
+        prefill_fn=prefill,
+    )
+
+
+def _hybrid_api(cfg: LMConfig) -> ModelAPI:
+    def loss_fn(params, batch):
+        logits, _ = hyb.forward(params, batch["tokens"], cfg)
+        return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+    def prefill(params, tokens):
+        logits, cache = hyb.forward(params, tokens, cfg, collect_kv=True)
+        return logits[:, -1], cache
+
+    def decode(params, cache, token, pos):
+        if cfg.serve_fast:  # carry-aliased fori_loop path (§Perf OPT1)
+            return hyb.cached_decode(params, token, cfg, cache, pos)
+        logits, new_cache = hyb.forward(
+            params, token[:, None], cfg, cache=cache, cache_pos=pos
+        )
+        return logits[:, 0], new_cache
+
+    def cache_axes(batch, max_seq):
+        cache = jax.eval_shape(lambda: hyb.init_cache(cfg, batch, max_seq))
+        kv = ("layers", "batch", "kv_seq", "kv_heads", None)
+
+        def st_axes(lead):
+            return hyb.mamba2.MambaState(
+                h=lead + ("batch", "ssm_heads", None, None),
+                conv=lead + ("batch", None, "mlp"),
+            )
+
+        return hyb.HybridCache(
+            mamba=st_axes(("layers", None)),
+            tail=st_axes(("layers",)) if cache.tail is not None else None,
+            attn_k=kv,
+            attn_v=kv,
+        )
+
+    return ModelAPI(
+        cfg=cfg,
+        init_params=lambda key: hyb.init_params(key, cfg),
+        param_axes=lambda: hyb.param_axes(cfg),
+        loss_fn=loss_fn,
+        prefill_fn=prefill,
+        decode_fn=decode,
+        init_cache=lambda batch, max_seq: hyb.init_cache(cfg, batch, max_seq),
+        cache_axes=cache_axes,
+    )
+
+
+def _ssm_api(cfg: LMConfig) -> ModelAPI:
+    def loss_fn(params, batch):
+        logits, _ = rwkv6.forward(params, batch["tokens"], cfg)
+        return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+    def prefill(params, tokens):
+        state = rwkv6.init_cache(cfg, tokens.shape[0])
+        logits, new_state = rwkv6.forward(params, tokens, cfg, state=state)
+        return logits[:, -1], new_state
+
+    def decode(params, cache, token, pos):
+        del pos  # recurrent state carries position implicitly
+        logits, new_state = rwkv6.forward(params, token[:, None], cfg, state=cache)
+        return logits[:, 0], new_state
+
+    def cache_axes(batch, max_seq):
+        return rwkv6.RWKVState(
+            s=("layers", "batch", "heads", None, None),
+            x_tm=("layers", "batch", "act_embed"),
+            x_cm=("layers", "batch", "act_embed"),
+        )
+
+    return ModelAPI(
+        cfg=cfg,
+        init_params=lambda key: rwkv6.init_params(key, cfg),
+        param_axes=lambda: rwkv6.param_axes(cfg),
+        loss_fn=loss_fn,
+        prefill_fn=prefill,
+        decode_fn=decode,
+        init_cache=lambda batch, max_seq: rwkv6.init_cache(cfg, batch),
+        cache_axes=cache_axes,
+    )
+
+
+def _audio_api(cfg: LMConfig) -> ModelAPI:
+    def loss_fn(params, batch):
+        enc = whisper.encode(params, batch["frames"], cfg)
+        cross = whisper.cross_kv(params, enc, cfg)
+        logits, _ = whisper.decoder_forward(params, batch["tokens"], cfg, cross)
+        return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+    def prefill(params, tokens, frames):
+        enc = whisper.encode(params, frames, cfg)
+        cross = whisper.cross_kv(params, enc, cfg)
+        logits, cache = whisper.decoder_forward(
+            params, tokens, cfg, cross, collect_kv=True
+        )
+        return logits[:, -1], cache
+
+    def decode(params, cache, token, pos):
+        cross = (cache.cross_k, cache.cross_v)
+        logits, new_cache = whisper.decoder_forward(
+            params, token[:, None], cfg, cross, cache=cache, cache_pos=pos
+        )
+        return logits[:, 0], new_cache
+
+    def init_cache(batch, max_seq, dtype=jnp.bfloat16):
+        L_ = cfg.n_layers
+        kv = (L_, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+        ckv = (L_, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd)
+        return whisper.WhisperCache(
+            self_k=jnp.zeros(kv, dtype),
+            self_v=jnp.zeros(kv, dtype),
+            cross_k=jnp.zeros(ckv, dtype),
+            cross_v=jnp.zeros(ckv, dtype),
+        )
+
+    def cache_axes(batch, max_seq):
+        kv = ("layers", "batch", "kv_seq", "kv_heads", None)
+        return whisper.WhisperCache(kv, kv, kv, kv)
+
+    return ModelAPI(
+        cfg=cfg,
+        init_params=lambda key: whisper.init_params(key, cfg),
+        param_axes=lambda: whisper.param_axes(cfg),
+        loss_fn=loss_fn,
+        prefill_fn=prefill,
+        decode_fn=decode,
+        init_cache=init_cache,
+        cache_axes=cache_axes,
+    )
+
+
+_FAMILIES = {
+    "dense": _dense_api,
+    "moe": _moe_api,
+    "vlm": _vlm_api,
+    "hybrid": _hybrid_api,
+    "ssm": _ssm_api,
+    "audio": _audio_api,
+}
+
+
+def get_api(cfg: LMConfig) -> ModelAPI:
+    return _FAMILIES[cfg.family](cfg)
+
+
+# ------------------------------------------------------------ input specs --
+
+
+def input_specs(cfg: LMConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of this (arch x shape).
+
+    train  -> {"batch": {...}}                        for loss/train_step
+    prefill-> {"args": (tokens[, patches|frames],)}   for prefill_fn
+    decode -> {"cache": ..., "token": ..., "pos": ...} for decode_fn
+    """
+    B, S = shape.global_batch, shape.seq_len
+    api = get_api(cfg)
+    tok = _sds((B, S), jnp.int32)
+
+    if shape.kind == "train":
+        batch = {"tokens": tok, "labels": tok}
+        if cfg.family == "vlm":
+            batch["patches"] = _sds((B, cfg.n_patches, llava.D_VISION), jnp.bfloat16)
+        if cfg.family == "audio":
+            batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        args = [tok]
+        if cfg.family == "vlm":
+            args.append(_sds((B, cfg.n_patches, llava.D_VISION), jnp.bfloat16))
+        if cfg.family == "audio":
+            args.append(_sds((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16))
+        return {"args": tuple(args)}
+
+    # decode: one new token against a populated cache of length S
+    cache = jax.eval_shape(lambda: api.init_cache(B, S))
+    return {
+        "cache": cache,
+        "token": _sds((B,), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def batch_axes(cfg: LMConfig, shape: ShapeSpec):
+    """Logical axes for the input batch/args (mirrors input_specs)."""
+    if shape.kind == "train":
+        axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+        if cfg.family == "vlm":
+            axes["patches"] = ("batch", None, None)
+        if cfg.family == "audio":
+            axes["frames"] = ("batch", None, None)
+        return {"batch": axes}
+    if shape.kind == "prefill":
+        axes = [("batch", None)]
+        if cfg.family in ("vlm", "audio"):
+            axes.append(("batch", None, None))
+        return {"args": tuple(axes)}
+    api = get_api(cfg)
+    return {
+        "cache": api.cache_axes(shape.global_batch, shape.seq_len),
+        "token": ("batch",),
+        "pos": (),
+    }

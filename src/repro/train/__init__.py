@@ -1,0 +1,1 @@
+from repro.train import checkpoint, ft, optimizer, trainer  # noqa: F401

@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests: a REDUCED same-family config per assigned
+arch runs one forward/train step and one decode step on CPU; asserts output
+shapes and no NaNs. The FULL configs are exercised only via the dry-run."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config, smoke_config
+from repro.models import llava, zoo
+
+
+def _smoke_batch(cfg, b=2, s=16):
+    key = jax.random.PRNGKey(0)
+    batch = {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros((b, 8, llava.D_VISION), jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.zeros((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = smoke_config(get_config(arch))
+    api = zoo.get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg)
+    loss, grads = jax.value_and_grad(api.loss_fn)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch} loss not finite"
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0, f"{arch} gradients vanished or NaN"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_smoke(arch):
+    cfg = smoke_config(get_config(arch))
+    api = zoo.get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    b, max_seq = 2, 32
+    cache = api.init_cache(b, max_seq)
+    logits, new_cache = api.decode_fn(
+        params, cache, jnp.ones((b,), jnp.int32), jnp.int32(3)
+    )
+    assert logits.shape == (b, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch} decode logits NaN"
+    assert jax.tree_util.tree_structure(new_cache) == jax.tree_util.tree_structure(cache)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_then_decode_consistent(arch):
+    """Prefill(t1..tn) + decode(tn+1) must match prefill(t1..tn+1) logits."""
+    cfg = smoke_config(get_config(arch))
+    if cfg.family in ("vlm", "audio"):
+        pytest.skip("prefill takes modality args; covered by family tests")
+    api = zoo.get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 9), 0, cfg.vocab_size)
+    full_logits, _ = api.prefill_fn(params, toks)
+
+    prefix_logits, cache = api.prefill_fn(params, toks[:, :8])
+    if hasattr(cache, "k"):  # pad dense KV to a bigger cache
+        big = api.init_cache(1, 32)
+        cache = type(cache)(
+            big.k.at[:, :, :8].set(cache.k.astype(big.k.dtype)),
+            big.v.at[:, :, :8].set(cache.v.astype(big.v.dtype)),
+        )
+    elif hasattr(cache, "attn_k"):
+        big = api.init_cache(1, 32)
+        cache = type(cache)(
+            mamba=cache.mamba,
+            tail=cache.tail,
+            attn_k=big.attn_k.at[:, :, :8].set(cache.attn_k.astype(big.attn_k.dtype)),
+            attn_v=big.attn_v.at[:, :, :8].set(cache.attn_v.astype(big.attn_v.dtype)),
+        )
+    step_logits, _ = api.decode_fn(params, cache, toks[:, 8], jnp.int32(8))
+    # tolerance: the serving cache holds K/V in bf16 (1/128 relative
+    # rounding) — logit noise ~0.05; real masking bugs give O(10) diffs
+    np.testing.assert_allclose(
+        np.asarray(step_logits[0]), np.asarray(full_logits[0]), rtol=2e-2, atol=0.1
+    )
+    assert int(step_logits[0].argmax()) == int(full_logits[0].argmax())
+
+
+def test_cells_assignment():
+    """40 assigned cells; long_500k only for sub-quadratic archs."""
+    all_cells = cells(include_skipped=True)
+    assert len(all_cells) == 40
+    runnable = cells()
+    long_archs = {a for a, s in runnable if s == "long_500k"}
+    assert long_archs == {"zamba2-7b", "rwkv6-3b"}
+
+
+def test_exact_configs_match_assignment():
+    spec = {
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+    }
+    for arch, (L, d, h, kv, ff, v) in spec.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == (
+            L, d, h, kv, ff, v), arch
+    assert get_config("deepseek-moe-16b").n_experts == 64
+    assert get_config("deepseek-moe-16b").top_k == 6
+    assert get_config("deepseek-moe-16b").n_shared_experts == 2
+    assert get_config("olmoe-1b-7b").top_k == 8
+    assert get_config("zamba2-7b").ssm_state == 64
+    assert get_config("qwen1.5-0.5b").qkv_bias

@@ -1,0 +1,338 @@
+"""Unit + property tests for the paper-core modules (LIF, bitmask, block
+conv, pruning, quant, mIoUT, gated one-to-all, bit-serial)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    bitmask as bm,
+    bitserial,
+    block_conv as bc,
+    lif,
+    miout,
+    pruning,
+    quant,
+    spike_conv as sc,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------- LIF ------
+class TestLIF:
+    def test_fires_above_threshold(self):
+        st0 = lif.lif_init((4,))
+        _, s = lif.lif_step(st0, jnp.array([0.6, 0.4, 0.5, -1.0]))
+        np.testing.assert_array_equal(s, [1.0, 0.0, 1.0, 0.0])
+
+    def test_hard_reset_zeroes_potential(self):
+        st0 = lif.lif_init((1,))
+        st1, s = lif.lif_step(st0, jnp.array([0.7]))
+        assert s[0] == 1.0 and st1.v[0] == 0.0
+
+    def test_leak_accumulation(self):
+        # v1 = 0.3 (no spike), v2 = 0.25*0.3 + 0.3 = 0.375 (no spike),
+        # v3 = 0.25*0.375 + 0.3 = 0.39375... never reaches 0.5 with x=0.3?
+        # fixed point v* = x / (1 - leak) = 0.4 < 0.5 -> never fires.
+        x = jnp.full((10, 1), 0.3)
+        spikes, _ = lif.lif_over_time(x)
+        assert jnp.sum(spikes) == 0
+
+    def test_integration_fires_eventually(self):
+        # x = 0.4: fixed point 0.5333 > 0.5 -> fires.
+        x = jnp.full((10, 1), 0.4)
+        spikes, _ = lif.lif_over_time(x)
+        assert jnp.sum(spikes) > 0
+
+    def test_soft_reset_subtracts(self):
+        st0 = lif.lif_init((1,))
+        st1, s = lif.lif_step(st0, jnp.array([0.9]), reset="soft")
+        assert s[0] == 1.0
+        np.testing.assert_allclose(st1.v, [0.4], atol=1e-6)
+
+    def test_surrogate_gradient_window(self):
+        g = jax.grad(lambda v: lif.spike_fn(v).sum())(jnp.array([0.5, 0.95, 1.1, -0.6]))
+        np.testing.assert_array_equal(g, [1.0, 1.0, 0.0, 0.0])
+
+    def test_membrane_readout_no_reset(self):
+        x = jnp.ones((3, 2)) * 1.0  # would spike every step if resetting
+        out = lif.membrane_readout(x)
+        # v: 1, 1.25, 1.3125 -> mean
+        np.testing.assert_allclose(out, np.full((2,), np.mean([1, 1.25, 1.3125])), rtol=1e-6)
+
+    def test_spikes_are_binary_property(self):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (5, 3, 7))
+        spikes, _ = lif.lif_over_time(x)
+        assert set(np.unique(np.asarray(spikes))).issubset({0.0, 1.0})
+
+    def test_grad_flows_through_time(self):
+        def loss(x):
+            s, _ = lif.lif_over_time(x)
+            return jnp.sum(s)
+
+        x = jnp.full((4, 8), 0.3)
+        g = jax.grad(loss)(x)
+        assert jnp.any(g != 0)
+
+
+class TestTdBN:
+    def test_normalizes_to_threshold_scale(self):
+        params, state = lif.tdbn_init(4)
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, 8, 6, 6, 4)) * 5 + 2
+        y, new_state = lif.tdbn_apply(params, state, x, training=True)
+        # mean ~ 0, std ~ threshold (0.5)
+        np.testing.assert_allclose(np.asarray(jnp.mean(y)), 0.0, atol=1e-2)
+        np.testing.assert_allclose(np.asarray(jnp.std(y)), lif.THRESHOLD, atol=1e-2)
+        assert new_state.count == 1
+
+    def test_inference_uses_running_stats(self):
+        params, state = lif.tdbn_init(2)
+        x = jnp.ones((2, 4, 2))
+        y, st2 = lif.tdbn_apply(params, state, x, training=False)
+        assert st2.count == 0  # unchanged
+
+
+# ------------------------------------------------------------- bitmask -----
+class TestBitmask:
+    def test_roundtrip(self):
+        w = np.array([[0, 1.5, 0], [2.0, 0, -3.0]], np.float32)
+        cw = bm.encode(w)
+        np.testing.assert_array_equal(bm.decode(cw), w)
+        assert cw.nnz == 3
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(1, 6), st.integers(1, 48), st.floats(0.0, 1.0))
+    def test_roundtrip_property(self, rows, cols, rate):
+        rng = np.random.default_rng(rows * 100 + cols)
+        w = rng.standard_normal((rows, cols)).astype(np.float32)
+        w[rng.random((rows, cols)) < rate] = 0.0
+        cw = bm.encode(w)
+        np.testing.assert_array_equal(np.asarray(bm.decode(cw)), w)
+
+    def test_padded_roundtrip(self):
+        w = np.array([1.0, 0.0, 2.0], np.float32)
+        cw = bm.encode(w, pad_to=8)
+        assert cw.values.shape == (8,)
+        np.testing.assert_array_equal(bm.decode(cw), w)
+
+    def test_csr_roundtrip(self):
+        rng = np.random.default_rng(0)
+        w = rng.standard_normal((8, 27)).astype(np.float32)
+        w[rng.random(w.shape) < 0.8] = 0
+        np.testing.assert_array_equal(np.asarray(bm.decode_csr(bm.encode_csr(w))), w)
+
+    def test_format_bits_orders_match_paper_regime(self):
+        # at 80% sparsity of 3x3 kernels, bitmask < csr < dense (Fig 17)
+        shape = (64, 64 * 9)
+        nnz = int(0.2 * 64 * 64 * 9)
+        dense = bm.format_bits(shape, nnz, fmt="dense")
+        mask = bm.format_bits(shape, nnz, fmt="bitmask")
+        csr = bm.format_bits(shape, nnz, fmt="csr")
+        assert mask < csr < dense
+
+
+# ---------------------------------------------------------- block conv -----
+class TestBlockConv:
+    def test_interior_matches_full_conv(self):
+        """Away from block borders, block conv == plain SAME conv."""
+        key = jax.random.PRNGKey(1)
+        x = jax.random.normal(key, (1, 36, 64, 3))
+        w = jax.random.normal(jax.random.PRNGKey(2), (3, 3, 3, 4))
+        full = bc.conv2d(x, w)
+        blocked = bc.block_conv2d(x, w, block_h=18, block_w=32)
+        # interior of the (0,0) block: rows 1..16, cols 1..30
+        np.testing.assert_allclose(
+            np.asarray(blocked[:, 1:17, 1:31]), np.asarray(full[:, 1:17, 1:31]), rtol=1e-4, atol=1e-4
+        )
+
+    def test_single_block_equals_replicate_pad_conv(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 18, 32, 5))
+        w = jax.random.normal(jax.random.PRNGKey(4), (3, 3, 5, 7))
+        blocked = bc.block_conv2d(x, w)
+        padded = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)), mode="edge")
+        ref = jax.lax.conv_general_dilated(
+            padded, w, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        np.testing.assert_allclose(np.asarray(blocked), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+    def test_1x1_blocked_equals_full(self):
+        x = jax.random.normal(jax.random.PRNGKey(5), (1, 36, 64, 4))
+        w = jax.random.normal(jax.random.PRNGKey(6), (1, 1, 4, 8))
+        np.testing.assert_allclose(
+            np.asarray(bc.block_conv2d(x, w)), np.asarray(bc.conv2d(x, w)), rtol=1e-4, atol=1e-4
+        )
+
+    def test_blocks_roundtrip(self):
+        x = jax.random.normal(jax.random.PRNGKey(7), (2, 54, 96, 3))
+        np.testing.assert_array_equal(np.asarray(bc.from_blocks(bc.to_blocks(x))), np.asarray(x))
+
+    def test_block_independence(self):
+        """Changing one block never affects another block's output — the
+        property that makes spatial sharding communication-free."""
+        x = jnp.zeros((1, 36, 64, 1))
+        w = jnp.ones((3, 3, 1, 1))
+        y0 = bc.block_conv2d(x, w)
+        x2 = x.at[0, 0, 0, 0].set(100.0)  # corner of block (0,0)
+        y2 = bc.block_conv2d(x2, w)
+        # block (0,1) spans cols 32..63 — untouched
+        np.testing.assert_array_equal(np.asarray(y2[:, :, 32:]), np.asarray(y0[:, :, 32:]))
+        np.testing.assert_array_equal(np.asarray(y2[:, 18:, :]), np.asarray(y0[:, 18:, :]))
+
+
+# -------------------------------------------------------------- pruning ----
+class TestPruning:
+    def test_rate(self):
+        w = jnp.arange(1, 101, dtype=jnp.float32).reshape(10, 10)
+        pruned = pruning.prune_by_rate(w, 0.8)
+        assert float(jnp.mean((pruned == 0).astype(jnp.float32))) == pytest.approx(0.8)
+
+    def test_keeps_largest(self):
+        w = jnp.array([0.1, -5.0, 0.2, 3.0], jnp.float32)
+        pruned = pruning.prune_by_rate(w, 0.5)
+        np.testing.assert_array_equal(pruned, [0.0, -5.0, 0.0, 3.0])
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.floats(0.0, 0.95), st.integers(2, 12))
+    def test_rate_property(self, rate, n):
+        rng = np.random.default_rng(n)
+        w = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+        pruned = pruning.prune_by_rate(w, rate)
+        got = float(jnp.mean((pruned == 0).astype(jnp.float32)))
+        assert got == pytest.approx(np.floor(rate * n * n) / (n * n), abs=1e-6)
+
+    def test_tree_selects_3x3_only(self):
+        params = {
+            "conv3": jnp.ones((3, 3, 8, 8)),
+            "conv1": jnp.ones((1, 1, 8, 8)),
+            "bias": jnp.ones((8,)),
+        }
+        rng = np.random.default_rng(0)
+        params["conv3"] = jnp.asarray(rng.standard_normal((3, 3, 8, 8)).astype(np.float32))
+        pruned = pruning.prune_tree(params, 0.8)
+        assert pruning.density(pruned["conv3"]) == pytest.approx(0.2, abs=0.01)
+        assert pruning.density(pruned["conv1"]) == 1.0
+        assert pruning.density(pruned["bias"]) == 1.0
+
+
+# ---------------------------------------------------------------- quant ----
+class TestQuant:
+    def test_roundtrip_error_bound(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (64,)) * 3
+        qx = quant.quantize(x)
+        err = jnp.max(jnp.abs(dq := quant.dequantize(qx) - x))
+        assert float(err) <= float(qx.scale) / 2 + 1e-6
+
+    def test_int8_payload(self):
+        qx = quant.quantize(jnp.linspace(-1, 1, 100))
+        assert qx.q.dtype == jnp.int8
+
+    def test_ste_gradient_passthrough(self):
+        g = jax.grad(lambda x: jnp.sum(quant.fake_quant_tensor(x)))(jnp.linspace(-1, 1, 16))
+        np.testing.assert_allclose(np.asarray(g), 1.0)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 8))
+    def test_quant_idempotent(self, bits):
+        x = jnp.linspace(-2, 2, 37)
+        q1 = quant.dequantize(quant.quantize(x, bits=bits))
+        q2 = quant.dequantize(quant.quantize(q1, bits=bits))
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- mIoUT ----
+class TestMIoUT:
+    def test_fig4_example(self):
+        """Paper Fig 4: 4 neurons fire at all 3 steps, 2 fire partially
+        -> mIoUT = 4/6 = 0.67."""
+        # single channel, 8 neurons: 4 always, 2 partial, 2 silent
+        T = 3
+        s = np.zeros((T, 8, 1), np.float32)
+        s[:, :4, 0] = 1.0  # always fire
+        s[0, 4, 0] = 1.0  # partial
+        s[1:, 5, 0] = 1.0  # partial (2 of 3)
+        got = float(miout.miout(jnp.asarray(s)))
+        assert got == pytest.approx(4 / 6, abs=1e-6)
+
+    def test_identical_steps_give_one(self):
+        s = jnp.asarray(np.random.default_rng(0).integers(0, 2, (1, 4, 4, 3)).astype(np.float32))
+        s3 = jnp.broadcast_to(s, (3, 4, 4, 3))
+        assert float(miout.miout(s3)) == pytest.approx(1.0)
+
+    def test_disjoint_steps_give_zero(self):
+        s = np.zeros((2, 4, 1), np.float32)
+        s[0, :2, 0] = 1.0
+        s[1, 2:, 0] = 1.0
+        assert float(miout.miout(jnp.asarray(s))) == 0.0
+
+    def test_schedule_prefix_rule(self):
+        in_ts = miout.choose_schedule([0.9, 0.8, 0.4, 0.9], [100, 100, 100, 100], threshold=0.6)
+        assert in_ts == [1, 1, 3, 3]  # late high-mIoUT layer NOT dropped
+
+    def test_schedule_ops(self):
+        assert miout.schedule_ops([10, 20], [1, 3]) == 70
+
+
+# ------------------------------------------------- gated one-to-all --------
+class TestGatedOneToAll:
+    @pytest.mark.parametrize("k,cin,cout", [(3, 4, 8), (1, 6, 5), (3, 1, 1)])
+    def test_matches_dense_conv(self, k, cin, cout):
+        key = jax.random.PRNGKey(k * 100 + cin)
+        spikes = (jax.random.uniform(key, (2, 9, 12, cin)) > 0.7).astype(jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, k, cin, cout))
+        w = pruning.prune_by_rate(w, 0.7)
+        ref = sc.conv_reference(spikes, w)
+        got = sc.gated_one_to_all(spikes, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+    def test_compressed_path(self):
+        spikes = (jax.random.uniform(jax.random.PRNGKey(0), (1, 6, 6, 3)) > 0.5).astype(jnp.float32)
+        w = pruning.prune_by_rate(jax.random.normal(jax.random.PRNGKey(1), (3, 3, 3, 4)), 0.8)
+        cw = bm.encode(np.asarray(w))
+        np.testing.assert_allclose(
+            np.asarray(sc.gated_one_to_all_compressed(spikes, cw)),
+            np.asarray(sc.conv_reference(spikes, w)),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_accumulate_count_sparsity_saving(self):
+        w = np.zeros((3, 3, 10, 10), np.float32)
+        w[0, 0, :, :] = 1.0  # 1/9 density
+        assert sc.accumulate_count(jnp.asarray(w), 576) == 100 * 576
+        assert sc.dense_count(jnp.asarray(w), 576) == 900 * 576
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 100))
+    def test_equivalence_property(self, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        spikes = (jax.random.uniform(k1, (1, 5, 7, 3)) > 0.6).astype(jnp.float32)
+        w = jax.random.normal(k2, (3, 3, 3, 2))
+        w = jnp.where(jax.random.uniform(k2, w.shape) > 0.5, w, 0.0)
+        np.testing.assert_allclose(
+            np.asarray(sc.gated_one_to_all(spikes, w)),
+            np.asarray(sc.conv_reference(spikes, w)),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+
+# ------------------------------------------------------------ bit-serial ---
+class TestBitSerial:
+    def test_bitplane_roundtrip(self):
+        x = jnp.asarray(np.random.default_rng(0).integers(0, 256, (1, 4, 4, 3)), jnp.uint8)
+        planes = bitserial.to_bitplanes(x)
+        np.testing.assert_array_equal(
+            np.asarray(bitserial.from_bitplanes(planes)), np.asarray(x).astype(np.float32)
+        )
+
+    def test_bitserial_conv_equals_direct(self):
+        """Paper §III-C.2: bit-serial multibit conv == direct conv."""
+        x = jnp.asarray(np.random.default_rng(1).integers(0, 256, (1, 8, 8, 3)), jnp.uint8)
+        w = jax.random.normal(jax.random.PRNGKey(2), (3, 3, 3, 4))
+        direct = sc.conv_reference(x.astype(jnp.float32), w)
+        serial = bitserial.bitserial_conv(x, w, sc.gated_one_to_all)
+        np.testing.assert_allclose(np.asarray(serial), np.asarray(direct), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,116 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes/dtypes/sparsity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.bitmask_matmul import pack_weights
+
+
+def _sparse_int8_weights(key, kh, kw, cin, k, density):
+    rng = np.random.default_rng(key)
+    w = rng.integers(-127, 128, (kh, kw, cin, k)).astype(np.int8)
+    mask = rng.random((kh, kw, cin, k)) < density
+    return (w * mask).astype(np.int8)
+
+
+class TestGatedOneToAllKernel:
+    @pytest.mark.parametrize(
+        "cin,k,density",
+        [(8, 16, 0.2), (16, 8, 0.5), (3, 40, 0.3), (32, 32, 0.05), (8, 8, 1.0)],
+    )
+    def test_matches_block_conv_3x3(self, cin, k, density):
+        w = _sparse_int8_weights(cin * 7 + k, 3, 3, cin, k, density)
+        pw = ops.pack_conv_weights(w, kblk=8)
+        rng = np.random.default_rng(0)
+        spikes = jnp.asarray(rng.integers(0, 2, (2, 18, 32, cin)), jnp.int8)
+        got = ops.gated_conv(spikes, pw)
+        want = ref.gated_conv_ref(spikes, jnp.asarray(w))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.5)
+
+    def test_1x1_kernel(self):
+        w = _sparse_int8_weights(3, 1, 1, 16, 24, 0.7)
+        pw = ops.pack_conv_weights(w, kblk=8)
+        spikes = jnp.asarray(np.random.default_rng(1).integers(0, 2, (1, 18, 32, 16)), jnp.int8)
+        got = ops.gated_conv(spikes, pw)
+        want = ref.gated_conv_ref(spikes, jnp.asarray(w))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.5)
+
+    def test_multi_spatial_blocks(self):
+        """Input larger than one 32×18 tile → independent block conv."""
+        w = _sparse_int8_weights(9, 3, 3, 8, 16, 0.3)
+        pw = ops.pack_conv_weights(w, kblk=16)
+        spikes = jnp.asarray(np.random.default_rng(2).integers(0, 2, (2, 36, 64, 8)), jnp.int8)
+        got = ops.gated_conv(spikes, pw)
+        want = ref.gated_conv_ref(spikes, jnp.asarray(w))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.5)
+
+    def test_all_zero_weights(self):
+        w = np.zeros((3, 3, 8, 8), np.int8)
+        pw = ops.pack_conv_weights(w, kblk=8)
+        spikes = jnp.ones((1, 18, 32, 8), jnp.int8)
+        got = ops.gated_conv(spikes, pw)
+        assert np.all(np.asarray(got) == 0)
+
+    def test_multiple_k_blocks(self):
+        w = _sparse_int8_weights(5, 3, 3, 8, 40, 0.25)
+        pw = ops.pack_conv_weights(w, kblk=16)  # 40 -> 3 blocks of 16
+        assert pw.maskp.shape[0] == 3
+        spikes = jnp.asarray(np.random.default_rng(3).integers(0, 2, (1, 18, 32, 8)), jnp.int8)
+        got = ops.gated_conv(spikes, pw)
+        want = ref.gated_conv_ref(spikes, jnp.asarray(w))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.5)
+
+    def test_compressed_bytes_smaller_than_dense(self):
+        w = _sparse_int8_weights(11, 3, 3, 64, 64, 0.2)
+        pw = ops.pack_conv_weights(w, kblk=64)
+        dense_bytes = w.size
+        assert pw.compressed_bytes < 0.5 * dense_bytes  # ~0.325 at 20% density
+
+
+class TestFusedLIFKernel:
+    @pytest.mark.parametrize("t,m,c", [(3, 100, 16), (1, 7, 8), (4, 600, 32)])
+    def test_matches_scan_oracle(self, t, m, c):
+        x = jax.random.normal(jax.random.PRNGKey(t * m), (t, m, c))
+        got = ops.fused_lif(x)
+        want = ref.fused_lif_ref(x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_threshold_leak_variants(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, 64, 8)) * 0.5
+        got = ops.fused_lif(x, threshold=0.3, leak=0.5)
+        want = np.asarray(
+            ref.fused_lif_ref(x, threshold=0.3, leak=0.5)
+            if False
+            else None
+        )
+        from repro.core import lif as lifm
+
+        spikes, _ = lifm.lif_over_time(x, threshold=0.3, leak=0.5)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(spikes.astype(jnp.int8)))
+
+
+class TestBitmaskMatmulKernel:
+    @pytest.mark.parametrize(
+        "m,k,n,density", [(32, 64, 48, 0.2), (100, 128, 64, 0.5), (16, 512, 256, 0.1)]
+    )
+    def test_matches_dense(self, m, k, n, density):
+        rng = np.random.default_rng(m + k + n)
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        w[rng.random((k, n)) >= density] = 0.0
+        packed = pack_weights(w, kblk=min(64, k), nblk=min(32, n))
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        got = ops.bitmask_matmul(x, packed, mblk=32)
+        want = ref.bitmask_matmul_ref(x, jnp.asarray(w))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+    def test_compression_ratio(self):
+        rng = np.random.default_rng(0)
+        w = rng.standard_normal((512, 512)).astype(np.float32)
+        w[rng.random(w.shape) >= 0.2] = 0.0
+        packed = pack_weights(w, kblk=128, nblk=128)
+        dense_bytes = w.size * 4
+        # f32 values: 0.2*4 bytes + 1/8 mask byte per element ≈ 0.93/4 of dense
+        assert packed.compressed_bytes < 0.35 * dense_bytes

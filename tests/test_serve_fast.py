@@ -1,0 +1,105 @@
+"""§Perf serve fast path (carry-aliased fori_loop cache) and int8 KV quant:
+must be numerically equivalent (argmax-exact; bf16-cache atol) to the naive
+scan path across families, including per-slot positions."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.models import zoo
+
+
+def _pair(arch):
+    cfg_f = smoke_config(get_config(arch))
+    cfg_n = dataclasses.replace(cfg_f, serve_fast=False)
+    return cfg_f, cfg_n
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "olmoe-1b-7b", "llava-next-34b"])
+def test_fast_prefill_matches_naive(arch):
+    cfg_f, cfg_n = _pair(arch)
+    api_f, api_n = zoo.get_api(cfg_f), zoo.get_api(cfg_n)
+    params = api_f.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 7), 0, cfg_f.vocab_size)
+    args = (toks,)
+    if cfg_f.family == "vlm":
+        args = (toks, jnp.ones((2, 8, 1024), jnp.float32) * 0.1)
+    lf, cf = api_f.prefill_fn(params, *args)
+    ln, cn = api_n.prefill_fn(params, *args)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(ln), rtol=2e-2, atol=0.1)
+    assert (lf.argmax(-1) == ln.argmax(-1)).all()
+    # the fast path's cache rows must equal the naive stacked KV
+    np.testing.assert_allclose(
+        np.asarray(cf.k, np.float32), np.asarray(cn.k.astype(cf.k.dtype), np.float32),
+        rtol=1e-2, atol=1e-2,
+    )
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "olmoe-1b-7b", "zamba2-7b"])
+def test_fast_decode_matches_naive(arch):
+    cfg_f, cfg_n = _pair(arch)
+    api_f, api_n = zoo.get_api(cfg_f), zoo.get_api(cfg_n)
+    params = api_f.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 7), 0, cfg_f.vocab_size)
+    _, small = api_n.prefill_fn(params, toks)
+    cache = api_f.init_cache(2, 32)
+    if hasattr(cache, "attn_k"):  # hybrid
+        cache = type(cache)(
+            mamba=small.mamba, tail=small.tail,
+            attn_k=cache.attn_k.at[:, :, :7].set(small.attn_k.astype(cache.attn_k.dtype)),
+            attn_v=cache.attn_v.at[:, :, :7].set(small.attn_v.astype(cache.attn_v.dtype)),
+        )
+    else:
+        cache = type(cache)(
+            cache.k.at[:, :, :7].set(small.k.astype(cache.k.dtype)),
+            cache.v.at[:, :, :7].set(small.v.astype(cache.v.dtype)),
+        )
+    tok = jnp.array([3, 5], jnp.int32)
+    df, _ = api_f.decode_fn(params, cache, tok, jnp.int32(7))
+    dn, _ = api_n.decode_fn(params, cache, tok, jnp.int32(7))
+    np.testing.assert_allclose(np.asarray(df), np.asarray(dn), rtol=2e-2, atol=0.1)
+    assert (df.argmax(-1) == dn.argmax(-1)).all()
+
+
+def test_fast_decode_per_slot_positions():
+    """Vectorized cache_pos (continuous batching) through the fast path."""
+    cfg_f, cfg_n = _pair("qwen1.5-0.5b")
+    api_f, api_n = zoo.get_api(cfg_f), zoo.get_api(cfg_n)
+    params = api_f.init_params(jax.random.PRNGKey(2))
+    cache = api_f.init_cache(2, 32)
+    # two slots at different positions
+    pos = jnp.array([5, 9], jnp.int32)
+    tok = jnp.array([7, 11], jnp.int32)
+    df, cf = api_f.decode_fn(params, cache, tok, pos)
+    dn, cn2 = api_n.decode_fn(params, cache, tok, pos)
+    np.testing.assert_allclose(np.asarray(df), np.asarray(dn), rtol=2e-2, atol=0.1)
+    # cache rows written at each slot's own position
+    for b, p in enumerate([5, 9]):
+        assert float(jnp.abs(cf.k[:, b, p]).sum()) > 0
+        assert float(jnp.abs(cf.k[:, b, p + 1]).sum()) == 0
+
+
+def test_kv_quant_accuracy():
+    """int8 KV (the paper's FXP8 on the cache): <1% logit error, argmax
+    agreement with the bf16 cache."""
+    base = smoke_config(get_config("qwen1.5-0.5b"))
+    cfg_q = dataclasses.replace(base, kv_quant=True)
+    api_q, api_f = zoo.get_api(cfg_q), zoo.get_api(base)
+    params = api_q.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, base.vocab_size)
+    lq, cq = api_q.prefill_fn(params, toks)
+    lf, _ = api_f.prefill_fn(params, toks)
+    rel = float(jnp.max(jnp.abs(lq - lf)) / jnp.max(jnp.abs(lf)))
+    assert rel < 0.02, rel
+    assert (lq.argmax(-1) == lf.argmax(-1)).all()
+    # int8 payload halves the bf16 cache bytes (+ one f32 scale per head
+    # row: 4/(2*hd) relative — 3% at the real hd=128, 12.5% at smoke hd=16)
+    hd = cq.k.shape[-1]
+    bytes_q = cq.k.size + cq.v.size + 4 * (cq.k_scale.size + cq.v_scale.size)
+    bytes_f = 2 * cq.k.size * 2
+    assert bytes_q < (0.5 + 4 / (2 * hd) + 0.02) * bytes_f
