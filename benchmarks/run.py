@@ -15,6 +15,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (
+        e2e_detector,
         fig3_density,
         fig5_miout,
         fig6_parallelism,
@@ -37,6 +38,7 @@ def main(argv=None):
         ("fig17_dram", lambda: fig17_dram.run()),
         ("table3_hw", lambda: table3_hw.run()),
         ("kernel_bench", lambda: kernel_bench.run()),
+        ("e2e_detector", lambda: e2e_detector.run()),
         ("roofline", lambda: roofline.run()),
     ]
     results, failed = {}, []

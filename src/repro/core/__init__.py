@@ -1,7 +1,7 @@
 """Core paper contributions: LIF/tdBN, gated one-to-all sparse conv, bitmask
 compression, block convolution, pruning, quantization, mIoUT, energy model."""
 
-from . import bitmask, bitserial, block_conv, energy, lif, miout, pruning, quant, spike_conv
+from . import bitmask, bitserial, block_conv, energy, lif, miout, plan, pruning, quant, spike_conv
 
 __all__ = [
     "bitmask",
@@ -10,6 +10,7 @@ __all__ = [
     "energy",
     "lif",
     "miout",
+    "plan",
     "pruning",
     "quant",
     "spike_conv",

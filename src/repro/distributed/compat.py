@@ -1,0 +1,41 @@
+"""jax version compatibility.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (where the
+replication-check kwarg is ``check_rep``) to ``jax.shard_map`` (where it is
+``check_vma``). This shim presents the modern signature on either version
+so the distributed modules run on the jax baked into the container.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pre-graduation jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the kwarg rename did not necessarily coincide with the graduation to
+# jax.shard_map — ask the actual signature which name it takes
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else "check_rep"
+)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{_CHECK_KW: check_vma}
+    )
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where the installed
+    jax has the explicit-sharding API (``jax.sharding.AxisType``), plain
+    otherwise (older jax is Auto-only, so the meaning is unchanged)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

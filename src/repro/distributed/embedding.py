@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.distributed.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed import sharding as shd

@@ -1,0 +1,14 @@
+"""Backend detection shared by every Pallas kernel wrapper (leaf module so
+kernel files can use it without importing ops and creating a cycle)."""
+from __future__ import annotations
+
+import jax
+
+
+def auto_interpret(interpret: bool | None = None) -> bool:
+    """Resolve the Pallas ``interpret`` flag: explicit bool wins; ``None``
+    auto-detects the backend (compiled Mosaic lowering on TPU, interpreter
+    elsewhere — CPU/GPU have no lowering for these kernels)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret

@@ -21,6 +21,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import auto_interpret
+
 
 class PackedMatmulWeights(NamedTuple):
     maskp: jax.Array  # (KB, NB, KBLK//8, NBLK) uint8, bits packed over K
@@ -92,8 +94,9 @@ def _kernel(x_ref, maskp_ref, vals_ref, out_ref, acc_ref, *, kb_total: int):
 
 
 def bitmask_matmul_pallas(
-    x: jax.Array, packed: PackedMatmulWeights, *, mblk: int = 256, interpret: bool = True
+    x: jax.Array, packed: PackedMatmulWeights, *, mblk: int = 256, interpret: bool | None = None
 ) -> jax.Array:
+    interpret = auto_interpret(interpret)
     m, k = x.shape
     k_orig, n_orig = packed.shape
     assert k == k_orig, (k, k_orig)

@@ -39,6 +39,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import auto_interpret
+
 # paper tile: 32 wide × 18 tall = 576 PEs
 BLOCK_H = 18
 BLOCK_W = 32
@@ -113,9 +115,13 @@ def gated_one_to_all_pallas(
     bh: int = BLOCK_H,
     bw: int = BLOCK_W,
     kblk: int,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Run the kernel. Returns (NB, BH, BW, KB*KBLK) int32 partial sums."""
+    """Run the kernel. Returns (NB, BH, BW, KB*KBLK) int32 partial sums.
+
+    ``interpret=None`` auto-detects: compiled Mosaic lowering on TPU,
+    interpreter mode on CPU/GPU backends."""
+    interpret = auto_interpret(interpret)
     nb_total, ph, pw, cin = spike_blocks.shape
     kb_total, taps, c8, kblk_ = maskp.shape
     assert kblk_ == kblk and taps == kh * kw and c8 * 8 == cin

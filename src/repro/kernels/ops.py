@@ -16,6 +16,7 @@ import numpy as np
 from . import gated_one_to_all as g2a
 from . import spike_lif as sl
 from . import bitmask_matmul as bmm
+from .backend import auto_interpret
 
 
 # ---------------------------------------------------------------------------
@@ -40,8 +41,17 @@ class PackedConvWeights(NamedTuple):
         return self.maskp.size + self.vals.size
 
 
-def pack_conv_weights(w_int8: np.ndarray, *, kblk: int = 128) -> PackedConvWeights:
-    """w_int8: (kh, kw, Cin, K) int8 (zeros = pruned). Host-side pack."""
+def pack_conv_weights(
+    w_int8: np.ndarray, *, kblk: int = 128, vpad: int | None = None
+) -> PackedConvWeights:
+    """w_int8: (kh, kw, Cin, K) int8 (zeros = pruned). Host-side pack.
+
+    ``vpad`` fixes the padded length of each K-block's packed-value vector
+    (useful to give every layer of a plan the same VPAD). The kernel's
+    decode clips gather indices into ``vals`` — an nnz that exceeds VPAD
+    would silently read garbage — so an insufficient ``vpad`` raises here,
+    at pack time, instead.
+    """
     w = np.asarray(w_int8)
     kh, kw, cin, k = w.shape
     taps = kh * kw
@@ -63,7 +73,14 @@ def pack_conv_weights(w_int8: np.ndarray, *, kblk: int = 128) -> PackedConvWeigh
         for b in range(8):
             maskp[kb] |= (m[:, :, b, :] << b).astype(np.uint8)
         vals_list.append(wb[wb != 0].ravel())
-    vpad = max((v.size for v in vals_list), default=1)
+    max_nnz = max((v.size for v in vals_list), default=0)
+    if vpad is None:
+        vpad = max(max_nnz, 1)
+    elif vpad < max_nnz:
+        raise ValueError(
+            f"vpad={vpad} < max per-K-block nnz={max_nnz}: the kernel's "
+            "clipped gather would silently read garbage values"
+        )
     vpad = max(vpad, 1)
     vals = np.zeros((kb_total, vpad), np.int8)
     for kb, v in enumerate(vals_list):
@@ -78,6 +95,22 @@ def pack_conv_weights(w_int8: np.ndarray, *, kblk: int = 128) -> PackedConvWeigh
         kout=k,
         kblk=kblk,
     )
+
+
+def validate_packed(pw: PackedConvWeights) -> None:
+    """Check that every K-block's nonzero count fits the packed-value
+    buffer. The kernel clips gather indices into ``vals`` (it cannot
+    bounds-check inside the grid), so an overflowing block silently reads
+    the last value — validate host-side and raise instead."""
+    maskp = np.asarray(pw.maskp)
+    vpad = int(pw.vals.shape[1])
+    nnz_per_kb = np.unpackbits(maskp.reshape(maskp.shape[0], -1), axis=1).sum(axis=1)
+    worst = int(nnz_per_kb.max()) if nnz_per_kb.size else 0
+    if worst > vpad:
+        raise ValueError(
+            f"packed weights invalid: K-block nnz={worst} exceeds VPAD={vpad}; "
+            "repack with a larger vpad (kernel would silently read garbage)"
+        )
 
 
 def _block_layout(spikes: jax.Array, *, bh: int, bw: int, pad: int, cin_p: int) -> jax.Array:
@@ -136,9 +169,14 @@ def gated_conv(
     *,
     bh: int = g2a.BLOCK_H,
     bw: int = g2a.BLOCK_W,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Sparse-compressed block convolution of int8 spikes. NHWC → NHWK int32."""
+    """Sparse-compressed block convolution of int8 spikes. NHWC → NHWK int32.
+
+    The leading axis is a plain batch: callers fold extra grid dimensions
+    (e.g. SNN time steps, bit-serial planes) into it so the whole T·N·blocks
+    volume runs through ONE pallas_call."""
+    interpret = auto_interpret(interpret)
     n, h, w, _ = spikes.shape
     pad = (pw.kh - 1) // 2
     blocks = _block_layout(spikes.astype(jnp.int8), bh=bh, bw=bw, pad=pad, cin_p=pw.cin)
@@ -171,12 +209,12 @@ def fused_lif(
     threshold: float = 0.5,
     leak: float = 0.25,
     mblk: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """LIF over T fully fused in VMEM (no HBM round-trip of the membrane
     potential between steps). Returns int8 spikes (T, M, C)."""
     return sl.fused_lif_pallas(
-        psum_t, threshold=threshold, leak=leak, mblk=mblk, interpret=interpret
+        psum_t, threshold=threshold, leak=leak, mblk=mblk, interpret=auto_interpret(interpret)
     )
 
 
@@ -194,7 +232,7 @@ def bitmask_matmul(
     packed,
     *,
     mblk: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """x (M, K) f32/bf16 × bitmask-compressed W (K, N) → (M, N) f32."""
-    return bmm.bitmask_matmul_pallas(x, packed, mblk=mblk, interpret=interpret)
+    return bmm.bitmask_matmul_pallas(x, packed, mblk=mblk, interpret=auto_interpret(interpret))

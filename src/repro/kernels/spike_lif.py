@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import auto_interpret
+
 
 def _kernel(x_ref, out_ref, *, threshold: float, leak: float, t: int):
     v = jnp.zeros(x_ref.shape[1:], jnp.float32)
@@ -30,8 +32,9 @@ def fused_lif_pallas(
     threshold: float,
     leak: float,
     mblk: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = auto_interpret(interpret)
     t, m, c = psum_t.shape
     m_p = (m + mblk - 1) // mblk * mblk
     if m_p != m:

@@ -6,7 +6,7 @@ single real CPU device; only launch/dryrun.py requests 512 placeholder
 host devices via XLA_FLAGS before any jax import)."""
 from __future__ import annotations
 
-import jax
+from repro.distributed.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,11 +15,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     composes with 'data' for hierarchical gradient reduction (DCN hop)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n_data: int = 1, n_model: int = 1):
     """Tiny mesh over however many local devices exist (tests/examples)."""
-    types = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((n_data, n_model), ("data", "model"), axis_types=types)
+    return make_mesh((n_data, n_model), ("data", "model"))

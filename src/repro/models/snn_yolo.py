@@ -32,6 +32,7 @@ LIF: threshold 0.5, leak 0.25, hard reset. All tensors NHWC; time leads:
 from __future__ import annotations
 
 import functools
+import weakref
 from dataclasses import dataclass, field
 from typing import Any, Literal
 
@@ -42,10 +43,12 @@ import numpy as np
 from repro.core import block_conv as bc
 from repro.core import energy as en
 from repro.core import lif as lifm
+from repro.core import plan as cplan
 from repro.core import pruning, quant
 from repro.core import spike_conv as sc
 
 Mode = Literal["snn", "ann", "qnn", "bnn"]
+ConvExec = Literal["dense", "gated", "pallas"]
 
 
 @dataclass(frozen=True)
@@ -69,6 +72,14 @@ class SNNDetConfig:
     use_block_conv: bool = False
     # in_T per LIF-producing macro layer: encode, conv_block, stages...
     mixed_time: bool = True
+    # which conv executor runs every layer (core/plan.py registry):
+    # "dense" oracle, "gated" shift-accumulate reference, "pallas" kernel
+    conv_exec: str = "dense"
+    # spatial block for block conv AND the Pallas grid; every feature-map
+    # resolution in the net must divide it (paper: 18×32)
+    block_hw: tuple = (18, 32)
+    # Pallas interpret override: None = auto-detect backend
+    kernel_interpret: bool | None = None
 
     @property
     def head_channels(self) -> int:
@@ -76,7 +87,10 @@ class SNNDetConfig:
 
     @property
     def grid_hw(self) -> tuple:
-        return (self.input_hw[0] // 32, self.input_hw[1] // 32)
+        # one maxpool after encode, one after conv_block, pooled_stages-1
+        # between stages (the paper's 5 pools ⇒ //32 at pooled_stages=4)
+        f = 2 ** (self.pooled_stages + 1)
+        return (self.input_hw[0] // f, self.input_hw[1] // f)
 
 
 # ----------------------------------------------------------------- params --
@@ -128,8 +142,22 @@ def param_count(params) -> int:
 
 def _conv(x, w, cfg: SNNDetConfig):
     if cfg.use_block_conv and w.shape[0] > 1:
-        return bc.block_conv2d(x, w)
+        bh, bw = cfg.block_hw
+        return bc.block_conv2d(x, w, block_h=bh, block_w=bw)
     return bc.conv2d(x, w)
+
+
+def _conv_t(x_t, layer_p, cfg: SNNDetConfig, *, name=None, plan=None):
+    """Run one conv layer over the (T, N, H, W, C) volume.
+
+    With a compiled plan the layer dispatches through the pluggable
+    executor registry (dense / gated / pallas — ``cfg.conv_exec``), which
+    folds T into the batch; without one it falls back to the legacy
+    fake-quant float path (the differentiable training path)."""
+    if plan is not None and name is not None and name in plan.layers:
+        return cplan.run_conv(x_t, plan.layers[name], cfg)
+    w = _maybe_quant_w(layer_p["w"], cfg)
+    return jax.vmap(lambda x: _conv(x, w, cfg))(x_t)
 
 
 def _maybe_quant_w(w, cfg: SNNDetConfig):
@@ -169,14 +197,13 @@ def _activation(y_t, cfg: SNNDetConfig):
     raise ValueError(cfg.mode)
 
 
-def _conv_bn_act(x_t, layer_p, layer_s, cfg, train, *, out_t=None):
+def _conv_bn_act(x_t, layer_p, layer_s, cfg, train, *, out_t=None, name=None, plan=None):
     """Conv (per time step) → tdBN → activation.
 
     Mixed time steps: if out_t > x_t.shape[0] == 1, the conv result is
     computed ONCE and broadcast to out_t steps before the LIF (paper §II-A).
     """
-    w = _maybe_quant_w(layer_p["w"], cfg)
-    y_t = jax.vmap(lambda x: _conv(x, w, cfg))(x_t)
+    y_t = _conv_t(x_t, layer_p, cfg, name=name, plan=plan)
     if out_t is not None and out_t != y_t.shape[0]:
         assert y_t.shape[0] == 1, "can only broadcast from T=1"
         y_t = jnp.broadcast_to(y_t, (out_t,) + y_t.shape[1:])
@@ -193,12 +220,64 @@ def _maxpool_t(x_t):
     )(x_t)
 
 
-def forward(params, bn_state, images, cfg: SNNDetConfig, *, train: bool = False):
+def _cached_plan(params, cfg: SNNDetConfig):
+    """Auto-built plan, cached on the identity of EVERY weight leaf (held
+    via weakrefs, so a freed-and-reallocated array can never alias a stale
+    entry) plus the plan-relevant config. Saves an eager eval loop from
+    re-packing all layers once per frame."""
+    leaves = tuple(layer_p["w"] for layer_p in params.values())
+    cfg_key = (cfg.weight_bits, tuple(cfg.block_hw))
+    cached = getattr(_cached_plan, "_entry", None)
+    if (
+        cached is not None
+        and cached[0] == cfg_key
+        and len(cached[1]) == len(leaves)
+        and all(ref() is leaf for ref, leaf in zip(cached[1], leaves))
+    ):
+        return cached[2]
+    plan = cplan.build_plan(params, cfg)
+    _cached_plan._entry = (cfg_key, tuple(weakref.ref(w) for w in leaves), plan)
+    return plan
+
+
+def forward(
+    params, bn_state, images, cfg: SNNDetConfig, *, train: bool = False, plan=None
+):
     """images: (N, H, W, 3) in [0, 1]. Returns (head, new_bn_state, aux).
 
     head: (N, gh, gw, anchors, 5 + classes) raw predictions.
     aux["spikes"]: per-macro-layer spike tensors for mIoUT analysis.
+
+    ``plan``: a precompiled :class:`repro.core.plan.DetectorPlan`. Required
+    (and auto-built when running eagerly) for ``cfg.conv_exec`` other than
+    "dense" — every conv layer then runs through the compressed executor.
     """
+    if cfg.conv_exec != "dense" and cfg.mode != "snn":
+        # compressed executors consume int8 binary spikes; ann/qnn/bnn
+        # activations are multibit floats and would truncate silently
+        raise ValueError(
+            f"conv_exec={cfg.conv_exec!r} requires mode='snn' (got "
+            f"mode={cfg.mode!r}: activations are not binary spikes)"
+        )
+    if cfg.conv_exec != "dense" and not cfg.weight_bits:
+        raise ValueError(
+            f"conv_exec={cfg.conv_exec!r} requires weight_bits > 0 (the "
+            "compressed plan is FXP int8; weight_bits=0 means float weights)"
+        )
+    if plan is not None and tuple(plan.block_hw) != tuple(cfg.block_hw):
+        raise ValueError(
+            f"plan was built for block_hw={tuple(plan.block_hw)} but "
+            f"cfg.block_hw={tuple(cfg.block_hw)}; rebuild the plan"
+        )
+    if plan is None and cfg.conv_exec != "dense":
+        try:
+            plan = _cached_plan(params, cfg)
+        except jax.errors.TracerArrayConversionError as e:
+            raise ValueError(
+                f"conv_exec={cfg.conv_exec!r} under jit needs a precompiled plan: "
+                "call repro.core.plan.build_plan(params, cfg) outside jit and "
+                "pass it as forward(..., plan=plan)"
+            ) from e
     full_t = 1 if cfg.mode != "snn" else cfg.full_t
     new_state = dict(bn_state)
     aux: dict[str, Any] = {"spikes": {}}
@@ -207,7 +286,9 @@ def forward(params, bn_state, images, cfg: SNNDetConfig, *, train: bool = False)
     x_t = x[None]  # encoding layer sees the raw image once (in_T = 1)
 
     # --- encode (ANN layer: fires once) ---
-    s_t, new_state["encode"] = _conv_bn_act(x_t, params["encode"], bn_state["encode"], cfg, train)
+    s_t, new_state["encode"] = _conv_bn_act(
+        x_t, params["encode"], bn_state["encode"], cfg, train, name="encode", plan=plan
+    )
     aux["spikes"]["encode"] = s_t
     s_t = _maxpool_t(s_t)
 
@@ -218,7 +299,8 @@ def forward(params, bn_state, images, cfg: SNNDetConfig, *, train: bool = False)
         s_t = jnp.broadcast_to(s_t, (full_t,) + s_t.shape[1:])
         out_t = full_t
     s_t, new_state["conv_block"] = _conv_bn_act(
-        s_t, params["conv_block"], bn_state["conv_block"], cfg, train, out_t=out_t
+        s_t, params["conv_block"], bn_state["conv_block"], cfg, train, out_t=out_t,
+        name="conv_block", plan=plan,
     )
     aux["spikes"]["conv_block"] = s_t
     s_t = _maxpool_t(s_t)
@@ -226,29 +308,24 @@ def forward(params, bn_state, images, cfg: SNNDetConfig, *, train: bool = False)
     # --- CSP basic blocks ---
     for i in range(len(cfg.stage_channels)):
         name = f"stage{i}"
-        short, new_state[f"{name}/shortcut"] = _conv_bn_act(
-            s_t, params[f"{name}/shortcut"], bn_state[f"{name}/shortcut"], cfg, train
-        )
-        m, new_state[f"{name}/main_in"] = _conv_bn_act(
-            s_t, params[f"{name}/main_in"], bn_state[f"{name}/main_in"], cfg, train
-        )
-        m, new_state[f"{name}/main_a"] = _conv_bn_act(
-            m, params[f"{name}/main_a"], bn_state[f"{name}/main_a"], cfg, train
-        )
-        m, new_state[f"{name}/main_b"] = _conv_bn_act(
-            m, params[f"{name}/main_b"], bn_state[f"{name}/main_b"], cfg, train
-        )
+
+        def cba(x_in, lname):
+            return _conv_bn_act(
+                x_in, params[lname], bn_state[lname], cfg, train, name=lname, plan=plan
+            )
+
+        short, new_state[f"{name}/shortcut"] = cba(s_t, f"{name}/shortcut")
+        m, new_state[f"{name}/main_in"] = cba(s_t, f"{name}/main_in")
+        m, new_state[f"{name}/main_a"] = cba(m, f"{name}/main_a")
+        m, new_state[f"{name}/main_b"] = cba(m, f"{name}/main_b")
         cat = jnp.concatenate([m, short], axis=-1)
-        s_t, new_state[f"{name}/agg"] = _conv_bn_act(
-            cat, params[f"{name}/agg"], bn_state[f"{name}/agg"], cfg, train
-        )
+        s_t, new_state[f"{name}/agg"] = cba(cat, f"{name}/agg")
         aux["spikes"][name] = s_t
         if i < cfg.pooled_stages - 1:
             s_t = _maxpool_t(s_t)
 
     # --- output conv: accumulate membrane with no reset, average over T ---
-    w_head = _maybe_quant_w(params["head"]["w"], cfg)
-    y_t = jax.vmap(lambda x: bc.conv2d(x, w_head))(s_t)
+    y_t = _conv_t(s_t, params["head"], cfg, name="head", plan=plan)
     if cfg.mode == "snn":
         head = lifm.membrane_readout(y_t, leak=cfg.leak)
     else:

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.configs import get_config, smoke_config
 from repro.configs.base import LMConfig

@@ -1,0 +1,176 @@
+"""Tests for the pluggable conv-executor pipeline (core/plan.py):
+kernel-vs-reference parity sweeps, full-model executor parity, plan
+compilation, and VPAD overflow validation."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as cplan
+from repro.core import pruning
+from repro.core import spike_conv as sc
+from repro.kernels import ops
+from repro.models import snn_yolo as sy
+
+
+def _sparse_int8_weights(seed, kh, kw, cin, k, density):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(-127, 128, (kh, kw, cin, k)).astype(np.int8)
+    mask = rng.random((kh, kw, cin, k)) < density
+    return (w * mask).astype(np.int8)
+
+
+def _gated_blocked_ref(spikes, w, bh=18, bw=32):
+    """spike_conv.gated_one_to_all with block-conv border semantics:
+    replicate-pad the tile, SAME-conv, crop the center."""
+    kh = w.shape[0]
+    pad = (kh - 1) // 2
+    x = spikes.astype(jnp.float32)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)), mode="edge")
+    out = sc.gated_one_to_all(x, w.astype(jnp.float32))
+    if pad:
+        out = out[:, pad:-pad, pad:-pad, :]
+    return out
+
+
+class TestKernelVsGatedOneToAll:
+    """Satellite: Pallas kernel vs the paper-faithful shift-accumulate
+    reference across kernel size × channel width × sparsity."""
+
+    @pytest.mark.parametrize("sparsity", [0.0, 0.5, 0.9])
+    @pytest.mark.parametrize("cin", [8, 32])
+    @pytest.mark.parametrize("kh", [1, 3])
+    def test_parity(self, kh, cin, sparsity):
+        w = _sparse_int8_weights(31 * kh + cin, kh, kh, cin, 16, 1.0 - sparsity)
+        pw = ops.pack_conv_weights(w, kblk=16)
+        rng = np.random.default_rng(cin + kh)
+        spikes = jnp.asarray(rng.integers(0, 2, (2, 18, 32, cin)), jnp.int8)
+        got = ops.gated_conv(spikes, pw)
+        want = _gated_blocked_ref(spikes, jnp.asarray(w))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.5)
+
+
+class TestPlan:
+    def test_build_plan_covers_every_conv_layer(self):
+        cfg = sy.SNNDetConfig(
+            input_hw=(24, 32), stem_channels=8, conv_block_channels=8,
+            stage_channels=((8, 8), (8, 16)), pooled_stages=1, block_hw=(6, 8),
+        )
+        params, _ = sy.init_params(jax.random.PRNGKey(0), cfg)
+        plan = cplan.build_plan(params, cfg, prune_rate=0.8)
+        assert set(plan.layers) == set(params)
+        assert plan.block_hw == (6, 8)
+        enc = plan.layers["encode"]
+        assert enc.in_bits == 8 and enc.packed.kh == 3
+        assert all(lp.in_bits == 1 for n, lp in plan.layers.items() if n != "encode")
+        # pruning reached the packed form: 3×3 kernels are ~80% zero
+        main_a = plan.layers["stage0/main_a"]
+        assert main_a.nnz < 0.35 * np.prod(main_a.w_q.shape)
+        assert plan.compressed_bytes < plan.dense_bytes
+
+    def test_executor_registry(self):
+        assert {"dense", "gated", "pallas"} <= set(cplan.CONV_EXECUTORS)
+        cfg = sy.SNNDetConfig(conv_exec="nope")
+        with pytest.raises(ValueError, match="unknown conv_exec"):
+            cplan.run_conv(jnp.zeros((1, 1, 6, 8, 8)), None, cfg)
+
+    def test_vpad_overflow_raises_at_pack_time(self):
+        """Bugfix: the kernel clips gather indices into the packed values,
+        so an undersized VPAD must fail loudly at plan/pack time."""
+        w = _sparse_int8_weights(0, 3, 3, 8, 8, 1.0)  # fully dense: nnz=576
+        with pytest.raises(ValueError, match="vpad"):
+            ops.pack_conv_weights(w, kblk=8, vpad=4)
+
+    def test_validate_packed_detects_corrupt_vals_buffer(self):
+        w = _sparse_int8_weights(1, 3, 3, 8, 8, 0.5)
+        pw = ops.pack_conv_weights(w, kblk=8)
+        bad = pw._replace(vals=pw.vals[:, :2])
+        with pytest.raises(ValueError, match="VPAD"):
+            ops.validate_packed(bad)
+        ops.validate_packed(pw)  # the honest pack passes
+
+
+class TestFullModelParity:
+    """Satellite + acceptance: the whole detector through each executor
+    matches the dense oracle at the (1, full_t=3) mixed time schedule."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg = sy.SNNDetConfig(
+            arch_id="snn-det-tiny",
+            input_hw=(24, 32),
+            stem_channels=8,
+            conv_block_channels=8,
+            stage_channels=((8, 8), (8, 8), (8, 16), (16, 16), (16, 16)),
+            pooled_stages=1,
+            full_t=3,
+            mode="snn",
+            weight_bits=8,
+            use_block_conv=True,
+            mixed_time=True,
+            block_hw=(6, 8),
+        )
+        params, bn = sy.init_params(jax.random.PRNGKey(0), cfg)
+        params = pruning.prune_tree(params, 0.8)
+        plan = cplan.build_plan(params, cfg)
+        rng = np.random.default_rng(0)
+        # uint8-grid images: the bit-serial 8-bit encode path is then exact
+        imgs = jnp.asarray(rng.integers(0, 256, (1, 24, 32, 3)) / 255.0, jnp.float32)
+        head, _, _ = sy.forward(params, bn, imgs, cfg, plan=plan)
+        return cfg, params, bn, plan, imgs, np.asarray(head)
+
+    @pytest.mark.parametrize("executor", ["gated", "pallas"])
+    def test_matches_dense_oracle(self, setup, executor):
+        cfg, params, bn, plan, imgs, head_dense = setup
+        c = dataclasses.replace(cfg, conv_exec=executor)
+        head, _, aux = sy.forward(params, bn, imgs, c, plan=plan)
+        assert head.shape == head_dense.shape
+        np.testing.assert_allclose(np.asarray(head), head_dense, atol=1e-4)
+        # intermediate spike maps stay binary through the compressed path
+        s = np.asarray(aux["spikes"]["stage4"])
+        assert set(np.unique(s)).issubset({0.0, 1.0})
+
+    def test_plan_autobuilds_eagerly_and_caches(self, setup):
+        cfg, params, bn, _, imgs, head_dense = setup
+        c = dataclasses.replace(cfg, conv_exec="pallas")
+        head, _, _ = sy.forward(params, bn, imgs, c)  # no plan passed
+        np.testing.assert_allclose(np.asarray(head), head_dense, atol=1e-4)
+        built = sy._cached_plan._entry[2]
+        sy.forward(params, bn, imgs, c)
+        assert sy._cached_plan._entry[2] is built  # not re-packed per call
+
+    def test_non_snn_mode_rejected(self):
+        """Compressed executors consume binary spikes; multibit ann/qnn/bnn
+        activations must fail loudly instead of truncating to int8."""
+        cfg = sy.SNNDetConfig(mode="ann", conv_exec="pallas")
+        with pytest.raises(ValueError, match="mode='snn'"):
+            sy.forward({}, {}, jnp.zeros((1, 32, 32, 3)), cfg)
+
+    def test_float_weights_rejected(self):
+        """weight_bits=0 means float weights — the FXP8 compressed plan
+        would silently quantize them, so it must refuse."""
+        cfg = sy.SNNDetConfig(weight_bits=0, conv_exec="pallas")
+        with pytest.raises(ValueError, match="weight_bits"):
+            sy.forward({}, {}, jnp.zeros((1, 32, 32, 3)), cfg)
+
+    def test_block_hw_mismatch_rejected(self, tiny_setup):
+        cfg, params, bn, plan, imgs = tiny_setup
+        c = dataclasses.replace(cfg, conv_exec="pallas", block_hw=(3, 4))
+        with pytest.raises(ValueError, match="block_hw"):
+            sy.forward(params, bn, imgs, c, plan=plan)
+
+    @pytest.fixture()
+    def tiny_setup(self):
+        cfg = sy.SNNDetConfig(
+            input_hw=(24, 32), stem_channels=8, conv_block_channels=8,
+            stage_channels=((8, 8), (8, 16)), pooled_stages=1, block_hw=(6, 8),
+        )
+        params, bn = sy.init_params(jax.random.PRNGKey(0), cfg)
+        plan = cplan.build_plan(params, cfg)
+        imgs = jnp.zeros((1, 24, 32, 3), jnp.float32)
+        return cfg, params, bn, plan, imgs
