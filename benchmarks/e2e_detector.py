@@ -25,7 +25,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import plan as cplan
 from repro.core import pruning
 from repro.models import snn_yolo as sy
 
@@ -36,19 +35,11 @@ EXECUTORS = ("dense", "gated", "pallas")
 def reduced_config() -> sy.SNNDetConfig:
     """Paper topology (all macro layers, 5 CSP stages, mixed (1,3) time
     steps) at a spatial scale the interpreted kernel can sweep on CPU."""
-    return sy.SNNDetConfig(
-        arch_id="snn-det-e2e",
-        input_hw=(24, 32),
-        stem_channels=8,
-        conv_block_channels=8,
-        stage_channels=((8, 8), (8, 8), (8, 16), (16, 16), (16, 16)),
-        pooled_stages=1,
-        full_t=3,
-        mode="snn",
-        weight_bits=8,
+    from repro.configs import get_config, smoke_config
+
+    return dataclasses.replace(
+        smoke_config(get_config("snn-det")), arch_id="snn-det-e2e",
         use_block_conv=True,
-        mixed_time=True,
-        block_hw=(6, 8),
     )
 
 
@@ -70,11 +61,14 @@ def run(cfg: sy.SNNDetConfig | None = None, *, prune_rate: float = 0.8,
     # prune ONCE and hand the identical tree to every executor — parity is
     # then purely about the conv dataflow, not the compression choices
     params = pruning.prune_tree(params, prune_rate)
-    plan = cplan.build_plan(params, cfg)
     rng = np.random.default_rng(0)
     h, w = cfg.input_hw
     # uint8-grid images: the 8-bit bit-serial encode path is then exact
     imgs = jnp.asarray(rng.integers(0, 256, (batch, h, w, 3)) / 255.0, jnp.float32)
+    # calibrated tdBN stats: fresh (0, 1) stats silence the deep layers of
+    # an untrained net, which would make the parity sweep (and the reported
+    # detection counts) vacuously zero past the first two layers
+    bn = sy.calibrate_bn_state(params, bn, imgs, cfg)
 
     results: dict = {
         "config": {
@@ -87,12 +81,15 @@ def run(cfg: sy.SNNDetConfig | None = None, *, prune_rate: float = 0.8,
         "executors": {},
     }
     heads = {}
+    plan = None
     for ex in EXECUTORS:
-        c = dataclasses.replace(cfg, conv_exec=ex)
-        head, _, _ = sy.forward(params, bn, imgs, c, plan=plan)  # warm caches
+        # the compile-once handle owns the plan + jitted forward + postprocess
+        det = sy.compile_detector(dataclasses.replace(cfg, conv_exec=ex), params, bn)
+        plan = det.plan
+        dets, head = det.detect(imgs)  # warm caches
         head.block_until_ready()
         t0 = time.perf_counter()
-        head, _, _ = sy.forward(params, bn, imgs, c, plan=plan)
+        dets, head = det.detect(imgs)
         head.block_until_ready()
         wall = time.perf_counter() - t0
         heads[ex] = np.asarray(head)
@@ -101,7 +98,8 @@ def run(cfg: sy.SNNDetConfig | None = None, *, prune_rate: float = 0.8,
         results["executors"][ex] = {
             "wall_s": wall,
             "max_abs_diff_vs_dense": diff,
-            "accumulates": _accumulates(cfg, plan, sparse=sparse),
+            "accumulates": _accumulates(cfg, det.plan, sparse=sparse),
+            "detections": [int(c) for c in np.asarray(dets.count)],
         }
         print(f"  {ex:7s}  wall {wall:8.3f}s  max|Δ| vs dense {diff:.2e}  "
               f"accumulates {results['executors'][ex]['accumulates']:,}")

@@ -23,6 +23,7 @@ def main(argv=None):
         fig17_dram,
         kernel_bench,
         roofline,
+        serve_bench,
         table1_ablation,
         table2_models,
         table3_hw,
@@ -39,6 +40,7 @@ def main(argv=None):
         ("table3_hw", lambda: table3_hw.run()),
         ("kernel_bench", lambda: kernel_bench.run()),
         ("e2e_detector", lambda: e2e_detector.run()),
+        ("serve_bench", lambda: serve_bench.run()),
         ("roofline", lambda: roofline.run()),
     ]
     results, failed = {}, []

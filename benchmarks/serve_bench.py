@@ -1,0 +1,80 @@
+"""Detection-serving benchmark: frame streams through the slot-pool Engine.
+
+For each conv executor, compiles the smoke-scale detector once, serves a
+fixed set of concurrent :class:`FrameRequest` streams through the Engine's
+continuous-batching loop, and records throughput (frames/sec) plus per-step
+latency percentiles (p50/p95 of one batched session step, jit warmup
+excluded). Also asserts that every executor's served raw heads match the
+dense executor's exactly (the compile-once path may not drift from the
+oracle under slot batching / membrane carryover).
+
+Writes ``BENCH_serve.json``.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+PARITY_ATOL = 1e-4
+EXECUTORS = ("dense", "gated", "pallas")
+
+
+def run(*, requests: int = 8, slots: int = 4, frames: int = 2,
+        out_json: str = "BENCH_serve.json") -> dict:
+    from repro.configs import get_config, smoke_config
+    from repro.models import snn_yolo as sy
+    from repro.serve import Engine, FrameRequest
+    from repro.serve.detector import demo_weights, step_latency_ms, synth_streams
+
+    base = smoke_config(get_config("snn-det"))
+    params, bn, rng = demo_weights(base)
+    streams = synth_streams(rng, requests, frames, base.input_hw)
+
+    results: dict = {
+        "config": {"requests": requests, "slots": slots,
+                   "frames_per_stream": frames, "input_hw": list(base.input_hw)},
+        "executors": {},
+    }
+    served_heads = {}
+    for ex in EXECUTORS:
+        cfg = dataclasses.replace(base, conv_exec=ex)
+        det = sy.compile_detector(cfg, params, bn)
+        eng = Engine(det, n_slots=slots)
+        reqs = [FrameRequest(rid=r, frames=s) for r, s in enumerate(streams)]
+        for fr in reqs:
+            eng.submit(fr)
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        assert len(done) == requests
+        served_heads[ex] = {fr.rid: np.stack(fr.heads) for fr in reqs}
+        diff = max(
+            float(np.abs(served_heads[ex][rid] - served_heads["dense"][rid]).max())
+            for rid in served_heads[ex]
+        )
+        assert diff <= PARITY_ATOL, f"{ex} served heads diverge from dense: {diff}"
+        results["executors"][ex] = {
+            "frames_per_s": requests * frames / dt,
+            "wall_s": dt,
+            **step_latency_ms(eng.core.step_wall),
+            "max_abs_diff_vs_dense": diff,
+        }
+        r = results["executors"][ex]
+        print(f"  {ex:7s} {r['frames_per_s']:7.1f} frames/s  "
+              f"p50 {r['step_p50_ms']:6.1f}ms  p95 {r['step_p95_ms']:6.1f}ms  "
+              f"max|Δ| vs dense {diff:.2e}")
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"  wrote {out_json}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

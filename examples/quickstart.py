@@ -6,6 +6,8 @@
 4. Compute mIoUT and pick the mixed-time-step schedule.
 5. Run the sparse conv through the gated one-to-all Pallas kernel
    (interpret mode) and check it against the oracle.
+6. Compile-once serving: ``compile_detector`` -> Detections, then stream
+   frames through a DetectorSession (membrane state carries across frames).
 
 Usage:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -68,6 +70,19 @@ def main():
     print(f"gated one-to-all kernel vs oracle: max err {err} "
           f"(taps executed: {int((wq != 0).sum())}/{wq.size})")
     assert err == 0
+
+    # 6. compile-once serving: the handle owns plan + jit + postprocess —
+    # no plan/config/state plumbing at the call site
+    bn = sy.calibrate_bn_state(pruned, bn, jnp.asarray(batch["image"]), cfg)
+    det = sy.compile_detector(cfg, pruned, bn)
+    frame = jnp.asarray(batch["image"])
+    dets = det(frame)
+    print(f"compile_detector: {int(dets.count[0])} detections "
+          f"(score_threshold {det.score_threshold}, class-aware NMS)")
+    sess = det.new_session(batch=1)
+    counts = [int(sess.step(frame).detections.count[0]) for _ in range(3)]
+    print(f"streaming session over 3 frames: detections {counts} "
+          f"(membrane potentials carry across frames; reset() cold-starts)")
     print("quickstart OK")
 
 

@@ -87,19 +87,22 @@ def main(argv=None):
     print(f"trained {args.steps} steps in {time.time()-t0:.0f}s; "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
 
-    # --- SNN-a -> SNN-d: prune 80% on 3x3, quantize weights to 8b ---
+    # --- SNN-a -> SNN-d: prune 80% on 3x3, quantize weights to 8b, then
+    # hand the trained tree to the compile-once serving API ---
     params = state["params"]
     pruned = pruning.prune_tree(params, rate=0.8)
     rep = pruning.tree_sparsity_report(pruned)
     q = jax.tree_util.tree_map(
         lambda x: quant.fake_quant_tensor(x, bits=8) if x.ndim == 4 else x, pruned
     )
-    head, _, _ = sy.forward(q, state["bn"], jnp.asarray(next(
-        sd.batches(2, hw=cfg.input_hw, steps=1))["image"]), cfg)
+    det = sy.compile_detector(cfg, q, state["bn"])
+    imgs = jnp.asarray(next(sd.batches(2, hw=cfg.input_hw, steps=1))["image"])
+    dets, head = det.detect(imgs)
     print(f"pruned: kept {rep['kept_frac']*100:.1f}% of {rep['total_params']/1e3:.0f}k "
           f"params (paper SNN-b: 30%)")
-    print(f"SNN-d style pruned+quantized forward OK: head {head.shape}, "
-          f"finite={bool(jnp.all(jnp.isfinite(head)))}")
+    print(f"SNN-d compile_detector OK: head {head.shape}, "
+          f"finite={bool(jnp.all(jnp.isfinite(head)))}, "
+          f"detections/frame {[int(c) for c in dets.count]}")
     if losses[-1] >= losses[0]:
         raise SystemExit("loss did not decrease")
     print("train_snn_detector OK")

@@ -116,9 +116,23 @@ class LMConfig:
         return total
 
 
-def smoke_config(cfg: LMConfig) -> LMConfig:
+def smoke_config(cfg):
     """Reduced same-family config for CPU smoke tests: few layers, small
-    width/vocab/experts — structure preserved."""
+    width/vocab/experts — structure preserved. Dispatches on config type:
+    LM cells shrink depth/width, the snn-det cell shrinks spatial extent
+    (all macro layers and the (1, full_t) mixed schedule preserved)."""
+    from repro.models.snn_yolo import SNNDetConfig  # lazy: avoid cycle
+
+    if isinstance(cfg, SNNDetConfig):
+        return replace(
+            cfg,
+            input_hw=(24, 32),
+            stem_channels=8,
+            conv_block_channels=8,
+            stage_channels=((8, 8), (8, 8), (8, 16), (16, 16), (16, 16)),
+            pooled_stages=1,
+            block_hw=(6, 8),
+        )
     return replace(
         cfg,
         n_layers=2,

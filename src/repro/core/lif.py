@@ -110,16 +110,32 @@ def lif_over_time(
     return spikes, final
 
 
-def membrane_readout(x_seq: jax.Array, *, leak: float = LEAK) -> jax.Array:
+def membrane_readout(
+    x_seq: jax.Array,
+    *,
+    leak: float = LEAK,
+    v0: jax.Array | None = None,
+    return_final: bool = False,
+):
     """Paper's output layer: accumulate membrane potential with NO reset and
-    average over time steps. x_seq: (T, ...) -> (...)."""
+    average over time steps. x_seq: (T, ...) -> (...).
+
+    ``v0`` warm-starts the accumulator (streaming sessions carry the head
+    membrane across frames); ``return_final`` additionally returns the final
+    membrane so the caller can thread it into the next frame.
+    """
+    if v0 is None:
+        v0 = jnp.zeros(x_seq.shape[1:], x_seq.dtype)
 
     def step(v, x):
         v = v * leak + x
         return v, v
 
-    _, vs = jax.lax.scan(step, jnp.zeros(x_seq.shape[1:], x_seq.dtype), x_seq)
-    return jnp.mean(vs, axis=0)
+    final, vs = jax.lax.scan(step, v0, x_seq)
+    out = jnp.mean(vs, axis=0)
+    if return_final:
+        return out, final
+    return out
 
 
 # ---------------------------------------------------------------------------

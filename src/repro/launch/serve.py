@@ -1,38 +1,31 @@
 """Serving launcher: --arch picks the architecture; the Engine provides
-continuous batching over a fixed slot pool. Smoke-scale on CPU; the same
-driver shards params/caches over the production mesh on real hardware
-(launch/dryrun.py proves those shardings compile).
+continuous batching over a fixed slot pool for BOTH workloads — LM token
+requests and snn-det frame streams (compile-once detector + streaming
+membrane sessions). Smoke-scale on CPU; the same driver shards
+params/caches over the production mesh on real hardware (launch/dryrun.py
+proves those shardings compile).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
       --requests 8 --slots 4 --max-new 16
+  PYTHONPATH=src python -m repro.launch.serve --arch snn-det \
+      --requests 8 --slots 4 --frames 3 [--conv-exec gated|pallas|dense]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import numpy as np
 
-from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.configs import ALL_IDS, get_config, smoke_config
 from repro.models import zoo
-from repro.serve import Engine, Request
+from repro.serve import Engine, FrameRequest, Request
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--full-config", action="store_true")
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
-    if not args.full_config:
-        cfg = smoke_config(cfg)
+def _serve_lm(cfg, args):
     api = zoo.get_api(cfg)
     params = api.init_params(jax.random.PRNGKey(0))
     eng = Engine(cfg, params, n_slots=args.slots, max_seq=args.max_seq)
@@ -52,6 +45,56 @@ def main(argv=None):
           f"({total} new tokens) in {dt:.1f}s — {total/dt:.1f} tok/s")
     for r in sorted(done, key=lambda r: r.rid)[:3]:
         print(f"  req {r.rid}: {r.out}")
+
+
+def _serve_detector(cfg, args):
+    from repro.models import snn_yolo as sy
+    from repro.serve.detector import demo_weights, step_latency_ms, synth_streams
+
+    cfg = dataclasses.replace(cfg, conv_exec=args.conv_exec)
+    params, bn, rng = demo_weights(cfg)
+    det = sy.compile_detector(cfg, params, bn)
+    eng = Engine(det, n_slots=args.slots)
+    total_frames = args.requests * args.frames
+    for r, frames in enumerate(
+        synth_streams(rng, args.requests, args.frames, cfg.input_hw)
+    ):
+        eng.submit(FrameRequest(rid=r, frames=frames))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    assert len(done) == args.requests
+    lat = step_latency_ms(eng.core.step_wall)
+    print(f"{args.arch}[{args.conv_exec}]: served {args.requests} streams "
+          f"({total_frames} frames) in {dt:.1f}s — {total_frames/dt:.1f} frames/s, "
+          f"step p50 {lat['step_p50_ms']:.1f}ms p95 {lat['step_p95_ms']:.1f}ms")
+    for r in sorted(done, key=lambda r: r.rid)[:3]:
+        counts = [int(d.count) for d in r.out]
+        print(f"  req {r.rid}: {len(r.out)} frames, detections/frame {counts}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ALL_IDS), required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--frames", type=int, default=3,
+                    help="frames per stream (snn-det requests)")
+    ap.add_argument("--conv-exec", default="gated",
+                    choices=["dense", "gated", "pallas"],
+                    help="detector conv executor (snn-det only)")
+    ap.add_argument("--full-config", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = smoke_config(cfg)
+    if args.arch == "snn-det":
+        _serve_detector(cfg, args)
+    else:
+        _serve_lm(cfg, args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,141 @@
+"""Pure-JAX detection postprocess: YOLO decode → score threshold → NMS.
+
+Everything here is shape-static and jit/vmap-safe — the serve path runs the
+whole stage inside the :class:`repro.serve.detector.CompiledDetector`'s
+jitted postprocess, so per-frame detection serving never leaves the device.
+Suppression is greedy class-aware NMS: a fixed budget of ``max_out`` picks,
+each pick suppressing same-class boxes above the IoU threshold (boxes of
+OTHER classes are never suppressed by a pick — per-class independence).
+
+Boxes are (cx, cy, w, h) in [0, 1] normalized image coordinates, matching
+``snn_yolo.decode_head``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.snn_yolo import DEFAULT_ANCHORS, decode_head
+
+
+class Detections(NamedTuple):
+    """Fixed-size (padded) per-image detection set.
+
+    All fields share the leading ``(..., max_out)`` shape; ``valid`` marks
+    the live entries (invalid rows are zero-filled padding).
+    """
+
+    boxes: jax.Array  # (..., max_out, 4) xywh, [0, 1] normalized
+    scores: jax.Array  # (..., max_out) obj * best-class probability
+    classes: jax.Array  # (..., max_out) int32 class id
+    valid: jax.Array  # (..., max_out) bool
+
+    @property
+    def count(self) -> jax.Array:
+        """Number of live detections per image: (...,) int32."""
+        return jnp.sum(self.valid.astype(jnp.int32), axis=-1)
+
+    def row(self, i: int) -> "Detections":
+        """Slice one image out of a batched Detections."""
+        return Detections(*(f[i] for f in self))
+
+
+def iou_xywh(a: jax.Array, b: jax.Array) -> jax.Array:
+    """IoU of center-format boxes; broadcasts over leading dims.
+    a: (..., 4), b: (..., 4) -> (...,)."""
+    ax0, ay0 = a[..., 0] - a[..., 2] / 2, a[..., 1] - a[..., 3] / 2
+    ax1, ay1 = a[..., 0] + a[..., 2] / 2, a[..., 1] + a[..., 3] / 2
+    bx0, by0 = b[..., 0] - b[..., 2] / 2, b[..., 1] - b[..., 3] / 2
+    bx1, by1 = b[..., 0] + b[..., 2] / 2, b[..., 1] + b[..., 3] / 2
+    iw = jnp.maximum(jnp.minimum(ax1, bx1) - jnp.maximum(ax0, bx0), 0.0)
+    ih = jnp.maximum(jnp.minimum(ay1, by1) - jnp.maximum(ay0, by0), 0.0)
+    inter = iw * ih
+    union = a[..., 2] * a[..., 3] + b[..., 2] * b[..., 3] - inter
+    return inter / jnp.maximum(union, 1e-9)
+
+
+def nms(
+    boxes: jax.Array,
+    scores: jax.Array,
+    classes: Optional[jax.Array] = None,
+    *,
+    iou_threshold: float = 0.5,
+    max_out: int = 32,
+) -> tuple[jax.Array, jax.Array]:
+    """Greedy NMS over one image. boxes (M, 4), scores (M,), classes (M,)
+    optional int — when given, suppression is class-aware (a pick only
+    suppresses boxes of ITS class). Entries with score <= 0 are dead on
+    arrival (the score threshold zeroes them upstream).
+
+    Returns (indices (max_out,) int32, valid (max_out,) bool).
+    """
+    m = boxes.shape[0]
+    idx0 = jnp.zeros((max_out,), jnp.int32)
+    ok0 = jnp.zeros((max_out,), bool)
+    if m == 0:  # empty candidate set: argmax over 0 entries is undefined
+        return idx0, ok0
+    live = jnp.where(scores > 0.0, scores, -jnp.inf)
+
+    def body(k, carry):
+        live, idx, ok = carry
+        i = jnp.argmax(live)
+        picked = live[i] > 0.0
+        same = jnp.ones((m,), bool) if classes is None else classes == classes[i]
+        overlap = iou_xywh(boxes, boxes[i]) >= iou_threshold
+        # the pick itself has IoU 1 with itself, so it dies here too
+        live = jnp.where(picked & same & overlap, -jnp.inf, live)
+        idx = idx.at[k].set(i.astype(jnp.int32))
+        ok = ok.at[k].set(picked)
+        return live, idx, ok
+
+    _, idx, ok = jax.lax.fori_loop(0, min(max_out, m), body, (live, idx0, ok0))
+    return idx, ok
+
+
+def class_aware_nms(boxes, scores, classes, *, iou_threshold=0.5, max_out=32):
+    """Per-class greedy NMS (thin alias: ``nms`` with classes required)."""
+    return nms(
+        boxes, scores, classes, iou_threshold=iou_threshold, max_out=max_out
+    )
+
+
+def postprocess(
+    head: jax.Array,
+    anchors=DEFAULT_ANCHORS,
+    *,
+    score_threshold: float = 0.25,
+    iou_threshold: float = 0.5,
+    max_detections: int = 32,
+) -> Detections:
+    """Full serving postprocess: ``decode_head`` (with its score threshold)
+    → best-class scoring → class-aware NMS. head: (N, gh, gw, A, 5+C) raw
+    predictions → batched fixed-size :class:`Detections`.
+
+    ``score_threshold`` gates BOTH the objectness (via ``decode_head``) and
+    the combined ``obj * best-class`` score, so every valid detection's
+    reported score is >= the threshold.
+    """
+    boxes, obj, cls = decode_head(head, anchors, threshold=score_threshold)
+    cls_id = jnp.argmax(cls, axis=-1).astype(jnp.int32)
+    score = obj * jnp.max(cls, axis=-1)
+    score = jnp.where(score >= score_threshold, score, 0.0)
+    # sub-threshold entries are exactly 0 -> dead on arrival in NMS
+    n = head.shape[0]
+    flat = lambda x, d: x.reshape((n, -1) + x.shape[x.ndim - d :])  # noqa: E731
+    boxes_f, score_f, cls_f = flat(boxes, 1), flat(score, 0), flat(cls_id, 0)
+
+    def one(b, s, c):
+        idx, ok = nms(
+            b, s, c, iou_threshold=iou_threshold, max_out=max_detections
+        )
+        okf = ok.astype(b.dtype)
+        return Detections(
+            boxes=b[idx] * okf[:, None],
+            scores=s[idx] * okf,
+            classes=c[idx] * ok.astype(jnp.int32),
+            valid=ok,
+        )
+
+    return jax.vmap(one)(boxes_f, score_f, cls_f)

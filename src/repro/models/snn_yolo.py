@@ -31,8 +31,8 @@ LIF: threshold 0.5, leak 0.25, hard reset. All tensors NHWC; time leads:
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-import weakref
 from dataclasses import dataclass, field
 from typing import Any, Literal
 
@@ -137,6 +137,29 @@ def param_count(params) -> int:
     return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
 
 
+def calibrate_bn_state(params, bn_state, images, cfg: SNNDetConfig, *, iters: int = 25):
+    """Move the tdBN running statistics onto real activation statistics by
+    running train-mode forwards. Fresh stats (mean 0, var 1) silence every
+    deep layer of an untrained net at eval time — serving demos, benchmarks
+    and streaming-session tests calibrate first so spikes actually flow.
+    Runs the dense path (no plan needed); returns the new bn_state."""
+    dense_cfg = cfg if cfg.conv_exec == "dense" else dataclasses.replace(cfg, conv_exec="dense")
+    step = jax.jit(lambda bn: forward(params, bn, images, dense_cfg, train=True)[1])
+    for _ in range(iters):
+        bn_state = step(bn_state)
+    return bn_state
+
+
+def default_bn_state(params):
+    """Fresh inference-time bn_state (mean 0, var 1) matching ``params`` —
+    what ``compile_detector`` uses when no trained statistics are given."""
+    return {
+        name: _bn_state(lp["w"].shape[-1])
+        for name, lp in params.items()
+        if "gamma" in lp
+    }
+
+
 # ---------------------------------------------------------------- forward --
 
 
@@ -180,35 +203,46 @@ def _tdbn(x_t, layer_p, layer_s, cfg, train):
     return y, {"mean": new_state.mean, "var": new_state.var, "count": new_state.count}
 
 
-def _activation(y_t, cfg: SNNDetConfig):
-    """Post-norm nonlinearity per model family. y_t: (T, N, H, W, C)."""
+def _activation(y_t, cfg: SNNDetConfig, *, v0=None):
+    """Post-norm nonlinearity per model family. y_t: (T, N, H, W, C).
+
+    Returns (act, v_final). ``v0`` warm-starts the LIF membrane (streaming
+    sessions carry it across frames); v_final is None for stateless modes.
+    """
     if cfg.mode == "snn":
-        spikes, _ = lifm.lif_over_time(y_t, threshold=cfg.threshold, leak=cfg.leak)
-        return spikes
+        init = None if v0 is None else lifm.LIFState(v=v0)
+        spikes, final = lifm.lif_over_time(
+            y_t, threshold=cfg.threshold, leak=cfg.leak, init=init
+        )
+        return spikes, final.v
     if cfg.mode == "ann":
-        return jax.nn.relu(y_t)
+        return jax.nn.relu(y_t), None
     if cfg.mode == "qnn":
         act = jax.nn.relu(y_t)
         qmax = 2**cfg.act_bits - 1
         scale = jnp.maximum(jnp.max(act), 1e-6) / qmax
-        return quant.fake_quant(act, scale)
+        return quant.fake_quant(act, scale), None
     if cfg.mode == "bnn":
-        return lifm.spike_fn(y_t, 0.0)  # sign-ish binary activation w/ STE
+        return lifm.spike_fn(y_t, 0.0), None  # sign-ish binary activation w/ STE
     raise ValueError(cfg.mode)
 
 
-def _conv_bn_act(x_t, layer_p, layer_s, cfg, train, *, out_t=None, name=None, plan=None):
+def _conv_bn_act(
+    x_t, layer_p, layer_s, cfg, train, *, out_t=None, name=None, plan=None, v0=None
+):
     """Conv (per time step) → tdBN → activation.
 
     Mixed time steps: if out_t > x_t.shape[0] == 1, the conv result is
     computed ONCE and broadcast to out_t steps before the LIF (paper §II-A).
+    Returns (act, new_bn_state, v_final).
     """
     y_t = _conv_t(x_t, layer_p, cfg, name=name, plan=plan)
     if out_t is not None and out_t != y_t.shape[0]:
         assert y_t.shape[0] == 1, "can only broadcast from T=1"
         y_t = jnp.broadcast_to(y_t, (out_t,) + y_t.shape[1:])
     y_t, new_s = _tdbn(y_t, layer_p, layer_s, cfg, train)
-    return _activation(y_t, cfg), new_s
+    act, v_final = _activation(y_t, cfg, v0=v0)
+    return act, new_s, v_final
 
 
 def _maxpool_t(x_t):
@@ -220,37 +254,32 @@ def _maxpool_t(x_t):
     )(x_t)
 
 
-def _cached_plan(params, cfg: SNNDetConfig):
-    """Auto-built plan, cached on the identity of EVERY weight leaf (held
-    via weakrefs, so a freed-and-reallocated array can never alias a stale
-    entry) plus the plan-relevant config. Saves an eager eval loop from
-    re-packing all layers once per frame."""
-    leaves = tuple(layer_p["w"] for layer_p in params.values())
-    cfg_key = (cfg.weight_bits, tuple(cfg.block_hw))
-    cached = getattr(_cached_plan, "_entry", None)
-    if (
-        cached is not None
-        and cached[0] == cfg_key
-        and len(cached[1]) == len(leaves)
-        and all(ref() is leaf for ref, leaf in zip(cached[1], leaves))
-    ):
-        return cached[2]
-    plan = cplan.build_plan(params, cfg)
-    _cached_plan._entry = (cfg_key, tuple(weakref.ref(w) for w in leaves), plan)
-    return plan
-
-
 def forward(
-    params, bn_state, images, cfg: SNNDetConfig, *, train: bool = False, plan=None
+    params,
+    bn_state,
+    images,
+    cfg: SNNDetConfig,
+    *,
+    train: bool = False,
+    plan=None,
+    membrane=None,
 ):
     """images: (N, H, W, 3) in [0, 1]. Returns (head, new_bn_state, aux).
 
     head: (N, gh, gw, anchors, 5 + classes) raw predictions.
     aux["spikes"]: per-macro-layer spike tensors for mIoUT analysis.
+    aux["membrane"]: final LIF membrane potential per layer (plus the head
+    accumulator under "head") — the streaming state a
+    :class:`repro.serve.detector.DetectorSession` threads across frames.
 
     ``plan``: a precompiled :class:`repro.core.plan.DetectorPlan`. Required
-    (and auto-built when running eagerly) for ``cfg.conv_exec`` other than
-    "dense" — every conv layer then runs through the compressed executor.
+    for ``cfg.conv_exec`` other than "dense" — every conv layer then runs
+    through the compressed executor. Plan ownership (build, cache, staleness
+    checks) lives in :func:`compile_detector`; this free function is the
+    internal core the handle wraps.
+
+    ``membrane``: optional {layer_name: v} dict warm-starting every LIF
+    membrane (cold start when None or when a layer key is missing).
     """
     if cfg.conv_exec != "dense" and cfg.mode != "snn":
         # compressed executors consume int8 binary spikes; ann/qnn/bnn
@@ -270,24 +299,26 @@ def forward(
             f"cfg.block_hw={tuple(cfg.block_hw)}; rebuild the plan"
         )
     if plan is None and cfg.conv_exec != "dense":
-        try:
-            plan = _cached_plan(params, cfg)
-        except jax.errors.TracerArrayConversionError as e:
-            raise ValueError(
-                f"conv_exec={cfg.conv_exec!r} under jit needs a precompiled plan: "
-                "call repro.core.plan.build_plan(params, cfg) outside jit and "
-                "pass it as forward(..., plan=plan)"
-            ) from e
+        raise ValueError(
+            f"conv_exec={cfg.conv_exec!r} needs a precompiled plan: use "
+            "repro.models.snn_yolo.compile_detector(cfg, params) (which owns "
+            "plan build/cache/staleness), or call "
+            "repro.core.plan.build_plan(params, cfg) outside jit and pass it "
+            "as forward(..., plan=plan)"
+        )
     full_t = 1 if cfg.mode != "snn" else cfg.full_t
     new_state = dict(bn_state)
-    aux: dict[str, Any] = {"spikes": {}}
+    mem = membrane or {}
+    new_mem: dict[str, Any] = {}
+    aux: dict[str, Any] = {"spikes": {}, "membrane": new_mem}
 
     x = images.astype(jnp.float32)
     x_t = x[None]  # encoding layer sees the raw image once (in_T = 1)
 
     # --- encode (ANN layer: fires once) ---
-    s_t, new_state["encode"] = _conv_bn_act(
-        x_t, params["encode"], bn_state["encode"], cfg, train, name="encode", plan=plan
+    s_t, new_state["encode"], new_mem["encode"] = _conv_bn_act(
+        x_t, params["encode"], bn_state["encode"], cfg, train, name="encode",
+        plan=plan, v0=mem.get("encode"),
     )
     aux["spikes"]["encode"] = s_t
     s_t = _maxpool_t(s_t)
@@ -298,9 +329,9 @@ def forward(
         # non-mixed baseline: replicate the input spikes to full_t steps
         s_t = jnp.broadcast_to(s_t, (full_t,) + s_t.shape[1:])
         out_t = full_t
-    s_t, new_state["conv_block"] = _conv_bn_act(
+    s_t, new_state["conv_block"], new_mem["conv_block"] = _conv_bn_act(
         s_t, params["conv_block"], bn_state["conv_block"], cfg, train, out_t=out_t,
-        name="conv_block", plan=plan,
+        name="conv_block", plan=plan, v0=mem.get("conv_block"),
     )
     aux["spikes"]["conv_block"] = s_t
     s_t = _maxpool_t(s_t)
@@ -311,15 +342,20 @@ def forward(
 
         def cba(x_in, lname):
             return _conv_bn_act(
-                x_in, params[lname], bn_state[lname], cfg, train, name=lname, plan=plan
+                x_in, params[lname], bn_state[lname], cfg, train, name=lname,
+                plan=plan, v0=mem.get(lname),
             )
 
-        short, new_state[f"{name}/shortcut"] = cba(s_t, f"{name}/shortcut")
-        m, new_state[f"{name}/main_in"] = cba(s_t, f"{name}/main_in")
-        m, new_state[f"{name}/main_a"] = cba(m, f"{name}/main_a")
-        m, new_state[f"{name}/main_b"] = cba(m, f"{name}/main_b")
+        short, new_state[f"{name}/shortcut"], new_mem[f"{name}/shortcut"] = cba(
+            s_t, f"{name}/shortcut"
+        )
+        m, new_state[f"{name}/main_in"], new_mem[f"{name}/main_in"] = cba(
+            s_t, f"{name}/main_in"
+        )
+        m, new_state[f"{name}/main_a"], new_mem[f"{name}/main_a"] = cba(m, f"{name}/main_a")
+        m, new_state[f"{name}/main_b"], new_mem[f"{name}/main_b"] = cba(m, f"{name}/main_b")
         cat = jnp.concatenate([m, short], axis=-1)
-        s_t, new_state[f"{name}/agg"] = cba(cat, f"{name}/agg")
+        s_t, new_state[f"{name}/agg"], new_mem[f"{name}/agg"] = cba(cat, f"{name}/agg")
         aux["spikes"][name] = s_t
         if i < cfg.pooled_stages - 1:
             s_t = _maxpool_t(s_t)
@@ -327,7 +363,9 @@ def forward(
     # --- output conv: accumulate membrane with no reset, average over T ---
     y_t = _conv_t(s_t, params["head"], cfg, name="head", plan=plan)
     if cfg.mode == "snn":
-        head = lifm.membrane_readout(y_t, leak=cfg.leak)
+        head, new_mem["head"] = lifm.membrane_readout(
+            y_t, leak=cfg.leak, v0=mem.get("head"), return_final=True
+        )
     else:
         head = jnp.mean(y_t, axis=0)
     n, gh, gw, _ = head.shape
@@ -418,10 +456,18 @@ def layer_specs(
 
 def decode_head(head, anchors, *, threshold=None):
     """YOLOv2 box decode. head: (N, gh, gw, A, 5+C) raw.
-    Returns (boxes_xywh [0-1 normalized], obj, class_probs)."""
+    Returns (boxes_xywh [0-1 normalized], obj, class_probs).
+
+    ``threshold``: score threshold on the objectness — boxes whose obj
+    score falls below it get obj zeroed, so downstream stages (NMS, the
+    serve postprocess) can treat obj > 0 as the validity mask. Box
+    coordinates and class probabilities are left intact.
+    """
     txy = jax.nn.sigmoid(head[..., 0:2])
     twh = head[..., 2:4]
     obj = jax.nn.sigmoid(head[..., 4])
+    if threshold is not None:
+        obj = jnp.where(obj >= threshold, obj, 0.0)
     cls = jax.nn.softmax(head[..., 5:], axis=-1)
     n, gh, gw, a, _ = head.shape
     gy, gx = jnp.meshgrid(jnp.arange(gh), jnp.arange(gw), indexing="ij")
@@ -435,6 +481,25 @@ def decode_head(head, anchors, *, threshold=None):
 
 
 DEFAULT_ANCHORS = ((1.0, 1.0), (2.0, 2.0), (4.0, 2.5), (2.5, 4.0), (6.0, 6.0))
+
+
+def compile_detector(cfg: SNNDetConfig, params, bn_state=None, **kwargs):
+    """Compile-once entry point: returns a
+    :class:`repro.serve.detector.CompiledDetector` owning the
+    :class:`~repro.core.plan.DetectorPlan`, the jitted executor-backed
+    forward, and the postprocess stage (decode → score threshold → NMS)::
+
+        det = compile_detector(cfg, params)
+        dets = det(frames)                    # Detections, zero plan plumbing
+        sess = det.new_session()              # streaming membrane state
+
+    See :mod:`repro.serve.detector` for the full handle/session API;
+    ``**kwargs`` (anchors, score/iou thresholds, prune_rate, ...) forward to
+    the ``CompiledDetector`` constructor.
+    """
+    from repro.serve.detector import CompiledDetector  # circular-import guard
+
+    return CompiledDetector(cfg, params, bn_state, **kwargs)
 
 
 def yolo_loss(head, targets, anchors=DEFAULT_ANCHORS, *, l_coord=5.0, l_noobj=0.5):

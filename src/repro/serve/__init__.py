@@ -1,1 +1,9 @@
-from repro.serve.engine import Engine, Request  # noqa: F401
+from repro.serve.engine import Engine, EngineAPI, LMEngineCore, Request  # noqa: F401
+from repro.serve.detector import (  # noqa: F401
+    CompiledDetector,
+    DetectorEngineCore,
+    DetectorSession,
+    FrameRequest,
+    SessionStep,
+    StalePlanError,
+)

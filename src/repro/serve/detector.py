@@ -1,0 +1,334 @@
+"""Compile-once detector serving: handles, streaming sessions, slot core.
+
+The paper's accelerator is a compile-once pipeline — weights are pruned,
+FXP8-quantized and bitmask-compressed offline, then frames stream through.
+This module is that shape as an API:
+
+* :class:`CompiledDetector` — the compile-once handle. Owns the
+  :class:`~repro.core.plan.DetectorPlan` (built exactly once, staleness-
+  checked on every call), the jitted executor-backed forward, and the
+  postprocess stage (``decode_head`` → score threshold → class-aware NMS),
+  so callers go ``det = compile_detector(cfg, params); dets = det(frames)``
+  with zero plan plumbing.
+
+* :class:`DetectorSession` — a streaming handle over consecutive video
+  frames. Carries every LIF membrane potential (and the head accumulator)
+  across frames — warm-starting temporal state instead of re-zeroing per
+  frame — with an explicit ``reset()``/``state`` contract. One session
+  object vectorizes a whole batch of independent streams (row i of the
+  batch is stream i; ``reset(i)`` cold-starts just that row), which is what
+  the serve Engine's slot pool runs on.
+
+* :class:`FrameRequest` + :class:`DetectorEngineCore` — the detector
+  backend for the Engine's slot/admission loop (``EngineAPI``): continuous
+  batching of frame streams over detector slots, one batched session step
+  per engine tick.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plan as cplan
+from repro.core import pruning
+from repro.models import snn_yolo as sy
+from repro.models.postprocess import Detections, postprocess
+
+
+class StalePlanError(RuntimeError):
+    """The handle's params changed after compile — its plan (and the jitted
+    closure over it) no longer describe the weights. Re-run
+    ``compile_detector`` on the new params."""
+
+
+def _weight_leaves(params) -> tuple:
+    return tuple(layer_p["w"] for layer_p in params.values())
+
+
+class SessionStep(NamedTuple):
+    """One streamed frame's outputs: postprocessed detections + raw head."""
+
+    detections: Detections
+    head: jax.Array  # (N, gh, gw, A, 5+C) raw predictions
+
+
+class CompiledDetector:
+    """Compile-once handle around the detector.
+
+    Build through :func:`repro.models.snn_yolo.compile_detector`. The
+    constructor prunes (optionally), builds the compression plan ONCE, and
+    jits a single step function — forward through the configured conv
+    executor plus the full postprocess — that every call and every session
+    reuses. ``__call__`` is stateless (cold membrane per frame);
+    :meth:`new_session` returns the streaming handle.
+    """
+
+    def __init__(
+        self,
+        cfg: sy.SNNDetConfig,
+        params,
+        bn_state=None,
+        *,
+        anchors=sy.DEFAULT_ANCHORS,
+        score_threshold: float = 0.25,
+        iou_threshold: float = 0.5,
+        max_detections: int = 32,
+        prune_rate: float | None = None,
+    ):
+        if prune_rate is not None:
+            params = pruning.prune_tree(params, prune_rate)
+        self.cfg = cfg
+        self.params = params
+        self.bn_state = bn_state if bn_state is not None else sy.default_bn_state(params)
+        self.anchors = tuple(anchors)
+        self.score_threshold = float(score_threshold)
+        self.iou_threshold = float(iou_threshold)
+        self.max_detections = int(max_detections)
+        if cfg.conv_exec != "dense" and not cfg.weight_bits:
+            raise ValueError(
+                f"conv_exec={cfg.conv_exec!r} requires weight_bits > 0; "
+                "float weights only run through the dense oracle"
+            )
+        # the compile step: one pass over the tree. The plan is the handle's
+        # owned artifact; the dense executor never reads it, so a dense
+        # handle defers packing until someone asks (`.plan` — e.g. the
+        # compression-accounting benchmarks).
+        self._plan = cplan.build_plan(params, cfg) if cfg.conv_exec != "dense" else None
+        # staleness fingerprint: identity of every weight leaf at compile
+        # time. A swapped/mutated leaf means the packed plan and the jitted
+        # constants are lying about the model -> refuse loudly.
+        self._compiled_leaves = _weight_leaves(params)
+
+        cfg_, plan_ = cfg, self._plan
+
+        def _step(params, bn, frames, mem):
+            head, _, aux = sy.forward(
+                params, bn, frames, cfg_, train=False, plan=plan_, membrane=mem
+            )
+            dets = postprocess(
+                head,
+                self.anchors,
+                score_threshold=self.score_threshold,
+                iou_threshold=self.iou_threshold,
+                max_detections=self.max_detections,
+            )
+            return head, aux["membrane"], dets
+
+        self._step = jax.jit(_step)
+
+    @property
+    def plan(self):
+        """The owned DetectorPlan (built lazily for dense handles, where
+        the executor runs straight off the quantized weights). None only
+        when weight_bits=0 (nothing to compress)."""
+        if self._plan is None and self.cfg.weight_bits:
+            self.check_plan()
+            self._plan = cplan.build_plan(self.params, self.cfg)
+        return self._plan
+
+    # ------------------------------------------------------------- checks --
+    def check_plan(self) -> None:
+        """Raise :class:`StalePlanError` if params changed after compile."""
+        now = _weight_leaves(self.params)
+        if len(now) != len(self._compiled_leaves) or any(
+            a is not b for a, b in zip(now, self._compiled_leaves)
+        ):
+            raise StalePlanError(
+                "detector params changed after compile: the owned plan/jit "
+                "no longer match the weights — call "
+                "snn_yolo.compile_detector(cfg, params) again"
+            )
+
+    # -------------------------------------------------------------- calls --
+    def __call__(self, frames) -> Detections:
+        """frames: (N, H, W, 3) in [0, 1] -> batched Detections (cold
+        membrane state — use a session for streaming video)."""
+        dets, _ = self.detect(frames)
+        return dets
+
+    def detect(self, frames) -> tuple[Detections, jax.Array]:
+        """Like ``__call__`` but also returns the raw head volume."""
+        self.check_plan()
+        head, _, dets = self._step(
+            self.params, self.bn_state, jnp.asarray(frames), None
+        )
+        return dets, head
+
+    # ----------------------------------------------------------- sessions --
+    def zero_state(self, batch: int):
+        """Cold-start membrane pytree for a ``batch``-stream session."""
+        if self.cfg.mode != "snn":
+            raise ValueError(
+                f"sessions stream LIF membrane state; mode={self.cfg.mode!r} "
+                "has no temporal state to carry"
+            )
+        h, w = self.cfg.input_hw
+        frames = jax.ShapeDtypeStruct((batch, h, w, 3), jnp.float32)
+        _, mem_shapes, _ = jax.eval_shape(
+            self._step, self.params, self.bn_state, frames, None
+        )
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), mem_shapes
+        )
+
+    def new_session(self, batch: int = 1) -> "DetectorSession":
+        return DetectorSession(self, batch)
+
+
+class DetectorSession:
+    """Streaming handle: membrane potentials persist across ``step`` calls.
+
+    The session vectorizes ``batch`` independent streams — feed it a
+    (batch, H, W, 3) frame stack per step; row i's state only ever mixes
+    with row i's frames. Contract:
+
+    * ``step(frames)`` — advance every stream by one frame; returns
+      :class:`SessionStep` (postprocessed detections + raw head).
+    * ``state`` — the current membrane pytree ({layer: v, ..., "head": v}).
+      A fresh or just-reset session's state is all zeros, and outputs from
+      it are bit-identical to the stateless ``detector(frames)`` path.
+    * ``reset()`` / ``reset(i)`` — cold-start every stream / only stream i.
+    """
+
+    def __init__(self, det: CompiledDetector, batch: int = 1):
+        self.det = det
+        self.batch = int(batch)
+        self._mem = det.zero_state(self.batch)
+        self.frames_seen = 0
+
+    @property
+    def state(self):
+        return self._mem
+
+    def step(self, frames) -> SessionStep:
+        frames = jnp.asarray(frames)
+        if frames.ndim != 4 or frames.shape[0] != self.batch:
+            raise ValueError(
+                f"session batch is {self.batch}; got frames {frames.shape} "
+                "(want (batch, H, W, 3))"
+            )
+        self.det.check_plan()
+        head, self._mem, dets = self.det._step(
+            self.det.params, self.det.bn_state, frames, self._mem
+        )
+        self.frames_seen += 1
+        return SessionStep(detections=dets, head=head)
+
+    def reset(self, index: int | None = None) -> None:
+        """Zero the membrane state of every stream, or of stream ``index``."""
+        if index is None:
+            self._mem = jax.tree_util.tree_map(jnp.zeros_like, self._mem)
+            self.frames_seen = 0
+            return
+        if not -self.batch <= index < self.batch:
+            # JAX drops out-of-bounds scatter indices silently — a typo'd
+            # stream index would "reset" nothing without this check
+            raise IndexError(f"stream index {index} out of range for batch {self.batch}")
+        self._mem = jax.tree_util.tree_map(
+            lambda v: v.at[index].set(0.0), self._mem
+        )
+
+
+# ------------------------------------------------- demo / benchmark setup --
+
+
+def demo_weights(cfg: sy.SNNDetConfig, *, prune_rate: float = 0.8, seed: int = 0,
+                 calib_batch: int = 2):
+    """Pruned + tdBN-calibrated random weights for serving demos, smoke CI
+    and benchmarks (real deployments load trained checkpoints instead).
+    Returns (params, bn_state, rng) — the rng continues the same stream so
+    callers generate matching synthetic frames."""
+    params, bn = sy.init_params(jax.random.PRNGKey(seed), cfg)
+    params = pruning.prune_tree(params, prune_rate)
+    rng = np.random.default_rng(seed)
+    h, w = cfg.input_hw
+    calib = (rng.integers(0, 256, (calib_batch, h, w, 3)) / 255.0).astype(np.float32)
+    bn = sy.calibrate_bn_state(params, bn, calib, cfg)
+    return params, bn, rng
+
+
+def synth_streams(rng, n_streams: int, n_frames: int, hw) -> list:
+    """Uint8-grid synthetic frame streams (exact under the bit-serial
+    8-bit encode path): n_streams arrays of (n_frames, H, W, 3)."""
+    h, w = hw
+    return [
+        (rng.integers(0, 256, (n_frames, h, w, 3)) / 255.0).astype(np.float32)
+        for _ in range(n_streams)
+    ]
+
+
+def step_latency_ms(step_wall: list) -> dict:
+    """p50/p95 of the engine's per-tick session-step latency, first tick
+    (jit warmup) excluded."""
+    wall = np.asarray(step_wall[1:] or step_wall)
+    return {
+        "step_p50_ms": float(np.percentile(wall, 50) * 1e3),
+        "step_p95_ms": float(np.percentile(wall, 95) * 1e3),
+    }
+
+
+# ------------------------------------------------------------ engine core --
+
+
+@dataclass
+class FrameRequest:
+    """A video-clip detection request: F consecutive frames of one stream."""
+
+    rid: int
+    frames: Any  # (F, H, W, 3) float array in [0, 1]
+    out: list = field(default_factory=list)  # per-frame Detections (numpy)
+    heads: list = field(default_factory=list)  # per-frame raw head (numpy)
+    done: bool = False
+
+
+class DetectorEngineCore:
+    """EngineAPI backend: continuous batching of frame streams over a
+    batch-of-sessions. Slot i of the pool is stream i of one vectorized
+    :class:`DetectorSession`; admission cold-starts that row, every engine
+    tick advances ALL active streams with one batched session step."""
+
+    def __init__(self, det: CompiledDetector, *, n_slots: int = 8):
+        self.det = det
+        self.n_slots = n_slots
+        self.session = det.new_session(batch=n_slots)
+        h, w = det.cfg.input_hw
+        self._blank = np.zeros((h, w, 3), np.float32)
+        self._cursor = [0] * n_slots
+        self.step_wall: list[float] = []  # per-tick latency (BENCH_serve)
+
+    def admit(self, req: FrameRequest, slot_idx: int) -> None:
+        req.frames = np.asarray(req.frames, np.float32)
+        if req.frames.ndim != 4 or req.frames.shape[0] < 1:
+            raise ValueError(
+                f"FrameRequest.frames must be (F, H, W, 3) with F >= 1; "
+                f"got {req.frames.shape}"
+            )
+        self.session.reset(slot_idx)  # new stream: cold membrane state
+        self._cursor[slot_idx] = 0
+
+    def step(self, active: dict[int, FrameRequest]) -> list[int]:
+        batch = np.stack(
+            [
+                active[i].frames[self._cursor[i]] if i in active else self._blank
+                for i in range(self.n_slots)
+            ]
+        )
+        t0 = time.perf_counter()
+        dets, head = self.session.step(jnp.asarray(batch))
+        jax.block_until_ready(head)
+        self.step_wall.append(time.perf_counter() - t0)
+        head_np = np.asarray(head)
+        dets_np = jax.tree_util.tree_map(np.asarray, dets)  # one transfer/field
+        finished = []
+        for i, req in active.items():
+            req.out.append(dets_np.row(i))
+            req.heads.append(head_np[i])
+            self._cursor[i] += 1
+            if self._cursor[i] >= len(req.frames):
+                finished.append(i)
+        return finished

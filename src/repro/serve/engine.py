@@ -1,23 +1,34 @@
 """Batched serving engine with continuous batching (slot-based).
 
-The engine holds a fixed pool of B decode slots over one shared KV cache.
-Requests are admitted into free slots; each decode step advances EVERY
-active slot by one token (per-slot cache positions — the vectorized
-cache_pos path in models/layers.py). Finished slots (EOS or max_tokens) are
+The engine holds a fixed pool of B slots. Requests are admitted into free
+slots; each step advances EVERY active slot together; finished slots are
 retired and refilled from the queue, vLLM-style, without ever re-lowering.
 
-Prefill runs per-request at bucketed lengths (powers of two) so the jit
-cache stays small; the prefilled KV is scattered into the slot's rows.
+The slot/admission loop itself is workload-agnostic: :class:`Engine` owns
+the queue, the slot occupancy, and the run loop, and delegates the actual
+model work to an :class:`EngineAPI` backend:
 
-Works for every KV-cache family (dense/moe/vlm/audio). Recurrent families
-(ssm/hybrid) serve through the same API with their O(1) state as the
-"cache"; positions are ignored by their decode fns.
+* :class:`LMEngineCore` — LM token serving. One shared KV cache over the
+  pool; prefill per-request at bucketed lengths, scattered into the slot's
+  rows; each step decodes one token for every active slot (per-slot cache
+  positions — the vectorized cache_pos path in models/layers.py). Works
+  for every KV-cache family (dense/moe/vlm/audio); recurrent families
+  (ssm/hybrid) serve through the same API with their O(1) state as the
+  "cache".
+
+* :class:`repro.serve.detector.DetectorEngineCore` — detection serving.
+  Slot i is stream i of a vectorized streaming
+  :class:`~repro.serve.detector.DetectorSession`; each step advances all
+  active frame streams by one frame through the compile-once detector.
+
+``Engine(cfg, params)`` dispatches on the config type (LMConfig vs
+SNNDetConfig), so ``launch/serve.py --arch`` drives both workloads through
+one loop.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -44,29 +55,38 @@ class Request:
     done: bool = False
 
 
-@dataclass
-class _Slot:
-    req: Optional[Request] = None
-    pos: int = 0  # next cache write position
+@runtime_checkable
+class EngineAPI(Protocol):
+    """Backend contract for the slot/admission loop.
 
-    @property
-    def free(self):
-        return self.req is None
+    The Engine owns queue + slot occupancy; a backend only ever sees
+    (request, slot index) pairs. ``admit`` loads one request's state into a
+    slot (prefill / session reset); ``step`` advances every active slot by
+    one unit of work (a token, a frame) and returns the slot indices that
+    finished this step. Backends expose ``n_slots`` so the Engine can size
+    its pool to match.
+    """
+
+    n_slots: int
+
+    def admit(self, req: Any, slot_idx: int) -> None: ...
+
+    def step(self, active: dict[int, Any]) -> list[int]: ...
 
 
-class Engine:
-    def __init__(self, cfg: LMConfig, params, *, n_slots: int = 8, max_seq: int = 512,
-                 greedy: bool = True):
+class LMEngineCore:
+    """EngineAPI backend for LM token serving over one shared KV cache."""
+
+    def __init__(self, cfg: LMConfig, params, *, n_slots: int = 8,
+                 max_seq: int = 512, greedy: bool = True):
         self.cfg = cfg
         self.api = zoo.get_api(cfg)
         self.params = params
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.greedy = greedy
-        self.slots = [_Slot() for _ in range(n_slots)]
+        self.pos = [0] * n_slots  # next cache write position per slot
         self.cache = self.api.init_cache(n_slots, max_seq)
-        self.queue: list[Request] = []
-        self.finished: list[Request] = []
         self._decode = jax.jit(self.api.decode_fn)
         self._prefill_cache = {}
 
@@ -79,14 +99,14 @@ class Engine:
             self._prefill_cache[plen] = jax.jit(self.api.prefill_fn)
         return self._prefill_cache[plen]
 
-    def _admit(self, req: Request, slot_idx: int):
+    def admit(self, req: Request, slot_idx: int):
         plen = len(req.prompt)
         toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
         logits, pcache = self._prefill_fn(plen)(self.params, toks)
         tok = int(jnp.argmax(logits[0]))
         req.out.append(tok)
         self._scatter_kv(pcache, slot_idx, plen)
-        self.slots[slot_idx] = _Slot(req=req, pos=plen)
+        self.pos[slot_idx] = plen
 
     def _scatter_kv(self, pcache, slot_idx: int, plen: int):
         """Copy the request's prefilled KV rows into the shared cache."""
@@ -134,42 +154,87 @@ class Engine:
             self.cache = jax.tree_util.tree_map(put_state, self.cache, pcache)
 
     # ------------------------------------------------------------- decode --
-    def _step(self):
-        active = [i for i, s in enumerate(self.slots) if not s.free]
-        if not active:
-            return
+    def step(self, active: dict[int, Request]) -> list[int]:
         toks = np.zeros((self.n_slots,), np.int32)
         pos = np.zeros((self.n_slots,), np.int32)
-        for i in active:
-            toks[i] = self.slots[i].req.out[-1]
-            pos[i] = self.slots[i].pos
+        for i, req in active.items():
+            toks[i] = req.out[-1]
+            pos[i] = self.pos[i]
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos)
         )
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for i in active:
-            slot = self.slots[i]
-            req = slot.req
-            slot.pos += 1
+        finished = []
+        for i, req in active.items():
+            self.pos[i] += 1
             tok = int(nxt[i])
             req.out.append(tok)
-            if tok == req.eos_id or len(req.out) >= req.max_new_tokens or slot.pos + 1 >= self.max_seq:
-                req.done = True
-                self.finished.append(req)
-                self.slots[i] = _Slot()
+            if (
+                tok == req.eos_id
+                or len(req.out) >= req.max_new_tokens
+                or self.pos[i] + 1 >= self.max_seq
+            ):
+                finished.append(i)
+        return finished
 
-    # --------------------------------------------------------------- API --
-    def submit(self, req: Request):
+
+def _resolve_core(cfg, params, *, n_slots, max_seq, greedy) -> EngineAPI:
+    if isinstance(cfg, LMConfig):
+        return LMEngineCore(cfg, params, n_slots=n_slots, max_seq=max_seq,
+                            greedy=greedy)
+    from repro.models.snn_yolo import SNNDetConfig, compile_detector
+    from repro.serve.detector import CompiledDetector, DetectorEngineCore
+
+    if isinstance(cfg, CompiledDetector):  # a pre-compiled handle
+        return DetectorEngineCore(cfg, n_slots=n_slots)
+    if isinstance(cfg, SNNDetConfig):
+        if isinstance(params, tuple):  # (params, bn_state) as init_params returns
+            p, bn = params
+        else:
+            p, bn = params, None
+        return DetectorEngineCore(compile_detector(cfg, p, bn), n_slots=n_slots)
+    raise TypeError(
+        f"don't know how to serve {type(cfg).__name__}: pass an LMConfig, an "
+        "SNNDetConfig, a CompiledDetector, or an explicit core="
+    )
+
+
+class Engine:
+    """The workload-agnostic slot/admission loop over an EngineAPI core."""
+
+    def __init__(self, cfg=None, params=None, *, n_slots: int = 8,
+                 max_seq: int = 512, greedy: bool = True,
+                 core: Optional[EngineAPI] = None):
+        self.core = core if core is not None else _resolve_core(
+            cfg, params, n_slots=n_slots, max_seq=max_seq, greedy=greedy
+        )
+        self.cfg = cfg
+        self.n_slots = self.core.n_slots
+        self.slots: list[Optional[Any]] = [None] * self.n_slots
+        self.queue: list[Any] = []
+        self.finished: list[Any] = []
+
+    def submit(self, req):
         self.queue.append(req)
+
+    def _active(self) -> dict[int, Any]:
+        return {i: r for i, r in enumerate(self.slots) if r is not None}
 
     def run(self, max_steps: int = 10_000):
         """Continuous-batching loop: admit from queue into free slots, then
-        decode all active slots together; repeat until drained."""
+        step all active slots together; repeat until drained."""
         steps = 0
-        while (self.queue or any(not s.free for s in self.slots)) and steps < max_steps:
-            for i, s in enumerate(self.slots):
-                if s.free and self.queue:
-                    self._admit(self.queue.pop(0), i)
-            self._step()
+        while (self.queue or any(r is not None for r in self.slots)) and steps < max_steps:
+            for i in range(self.n_slots):
+                if self.slots[i] is None and self.queue:
+                    req = self.queue.pop(0)
+                    self.core.admit(req, i)
+                    self.slots[i] = req
+            active = self._active()
+            if active:
+                for i in self.core.step(active):
+                    self.slots[i].done = True
+                    self.finished.append(self.slots[i])
+                    self.slots[i] = None
             steps += 1
         return self.finished

@@ -1,0 +1,293 @@
+"""Compile-once detector API: CompiledDetector plan ownership + staleness,
+DetectorSession streaming semantics (membrane carryover, reset()/state
+contract, batch-of-sessions, mixed (1,3) schedule), and FrameRequest
+serving through the Engine slot pool with executor parity vs the dense
+oracle."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core import pruning
+from repro.models import snn_yolo as sy
+from repro.models.postprocess import Detections
+from repro.serve import (
+    CompiledDetector,
+    DetectorEngineCore,
+    Engine,
+    EngineAPI,
+    FrameRequest,
+    LMEngineCore,
+    StalePlanError,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config(get_config("snn-det"))
+    params, bn = sy.init_params(jax.random.PRNGKey(0), cfg)
+    params = pruning.prune_tree(params, 0.8)
+    rng = np.random.default_rng(0)
+    h, w = cfg.input_hw
+    # uint8-grid frames keep the bit-serial 8-bit encode path exact
+    frames = jnp.asarray(rng.integers(0, 256, (6, 2, h, w, 3)) / 255.0, jnp.float32)
+    # calibrated tdBN stats: fresh (0, 1) stats silence the deep layers of
+    # an untrained net, which would make streaming tests vacuous
+    bn = sy.calibrate_bn_state(params, bn, frames[0], cfg)
+    return cfg, params, bn, frames
+
+
+@pytest.fixture(scope="module")
+def det(setup):
+    cfg, params, bn, _ = setup
+    return sy.compile_detector(
+        dataclasses.replace(cfg, conv_exec="gated"), params, bn
+    )
+
+
+class TestCompiledDetector:
+    def test_call_returns_detections(self, det, setup):
+        _, _, _, frames = setup
+        dets = det(frames[0])
+        assert isinstance(dets, Detections)
+        assert dets.boxes.shape[0] == 2 and dets.boxes.shape[-1] == 4
+        assert dets.valid.dtype == jnp.bool_
+
+    def test_plan_owned_and_stable(self, det, setup):
+        _, _, _, frames = setup
+        plan = det.plan
+        assert plan is not None and plan.compressed_bytes < plan.dense_bytes
+        det(frames[0])
+        det(frames[1])
+        assert det.plan is plan  # compiled once, never re-packed per call
+
+    def test_dense_handle_builds_plan_lazily(self, setup):
+        cfg, params, bn, frames = setup
+        d = sy.compile_detector(cfg, params, bn)  # dense executor
+        assert d._plan is None  # nothing packed at compile time
+        d(frames[0])
+        assert d._plan is None  # ...nor on the serving path
+        plan = d.plan  # compression accounting builds on demand
+        assert plan is not None and d.plan is plan
+
+    def test_stale_params_raise(self, setup):
+        cfg, params, bn, frames = setup
+        d = sy.compile_detector(cfg, dict(params), bn)
+        d(frames[0])
+        # swap a weight leaf after compile: the owned plan no longer
+        # describes the model -> every entry point must refuse
+        d.params["encode"] = dict(d.params["encode"])
+        d.params["encode"]["w"] = d.params["encode"]["w"] + 1e-3
+        with pytest.raises(StalePlanError, match="compile"):
+            d(frames[0])
+        with pytest.raises(StalePlanError):
+            d.detect(frames[0])
+
+    def test_stale_params_raise_in_session(self, setup):
+        cfg, params, bn, frames = setup
+        d = sy.compile_detector(cfg, dict(params), bn)
+        sess = d.new_session(batch=2)
+        sess.step(frames[0])
+        d.params["head"] = {"w": d.params["head"]["w"] * 2}
+        with pytest.raises(StalePlanError):
+            sess.step(frames[1])
+
+    def test_forward_without_plan_raises(self, setup):
+        """Migrated from the removed snn_yolo._cached_plan: the free
+        function no longer auto-builds — plan ownership lives in the
+        handle."""
+        cfg, params, bn, frames = setup
+        c = dataclasses.replace(cfg, conv_exec="pallas")
+        with pytest.raises(ValueError, match="compile_detector"):
+            sy.forward(params, bn, frames[0], c)
+
+    def test_float_weights_cannot_compile_compressed(self, setup):
+        cfg, params, bn, _ = setup
+        c = dataclasses.replace(cfg, weight_bits=0, conv_exec="gated")
+        with pytest.raises(ValueError, match="weight_bits"):
+            sy.compile_detector(c, params, bn)
+
+    def test_default_bn_state(self, setup):
+        cfg, params, _, frames = setup
+        d = sy.compile_detector(cfg, params)  # no bn given -> fresh stats
+        assert set(d.bn_state) == {n for n in params if n != "head"}
+        d(frames[0])  # runs
+
+
+class TestDetectorSession:
+    def test_cold_start_matches_stateless(self, det, setup):
+        _, _, _, frames = setup
+        sess = det.new_session(batch=2)
+        step = sess.step(frames[0])
+        dets, head = det.detect(frames[0])
+        np.testing.assert_array_equal(np.asarray(step.head), np.asarray(head))
+        np.testing.assert_array_equal(
+            np.asarray(step.detections.scores), np.asarray(dets.scores)
+        )
+
+    def test_carryover_vs_fresh_parity_on_static_sequence(self, det, setup):
+        """Replaying the same frame sequence from reset() reproduces the
+        fresh session bit-exactly — carryover is a pure function of the
+        streamed frames."""
+        _, _, _, frames = setup
+        sess = det.new_session(batch=2)
+        heads_fresh = [np.asarray(sess.step(frames[0]).head) for _ in range(3)]
+        sess.reset()
+        heads_replay = [np.asarray(sess.step(frames[0]).head) for _ in range(3)]
+        for a, b in zip(heads_fresh, heads_replay):
+            np.testing.assert_array_equal(a, b)
+        # and state genuinely flows: the warm second step differs from cold
+        assert np.abs(heads_fresh[1] - heads_fresh[0]).max() > 0
+
+    def test_reset_restores_cold_start_outputs(self, det, setup):
+        _, _, _, frames = setup
+        sess = det.new_session(batch=2)
+        cold = np.asarray(sess.step(frames[0]).head)
+        sess.step(frames[1])
+        sess.step(frames[2])
+        sess.reset()
+        assert sess.frames_seen == 0
+        np.testing.assert_array_equal(np.asarray(sess.step(frames[0]).head), cold)
+
+    def test_state_contract(self, det, setup):
+        _, _, _, frames = setup
+        sess = det.new_session(batch=2)
+        assert all(
+            float(jnp.abs(v).max()) == 0.0
+            for v in jax.tree_util.tree_leaves(sess.state)
+        )
+        assert "head" in sess.state  # the no-reset output accumulator
+        sess.step(frames[0])
+        assert any(
+            float(jnp.abs(v).max()) > 0
+            for v in jax.tree_util.tree_leaves(sess.state)
+        )
+        with pytest.raises(ValueError, match="batch"):
+            sess.step(frames[0][:1])  # wrong batch size
+
+    def test_batch_of_sessions_rows_independent(self, det, setup):
+        """The vectorized path: row i of a batched session must equal an
+        independent single-stream session fed row i's frames."""
+        _, _, _, frames = setup
+        batched = det.new_session(batch=2)
+        outs = [np.asarray(batched.step(f).head) for f in frames[:3]]
+        for row in range(2):
+            solo = det.new_session(batch=1)
+            for k, f in enumerate(frames[:3]):
+                h = np.asarray(solo.step(f[row : row + 1]).head)
+                np.testing.assert_array_equal(h[0], outs[k][row])
+
+    def test_reset_out_of_range_raises(self, det):
+        """Regression: jnp scatter drops OOB indices silently, so a typo'd
+        stream index must fail loudly instead of resetting nothing."""
+        sess = det.new_session(batch=2)
+        with pytest.raises(IndexError, match="out of range"):
+            sess.reset(2)
+        sess.reset(-1)  # negative indices within range are fine
+
+    def test_per_row_reset(self, det, setup):
+        _, _, _, frames = setup
+        sess = det.new_session(batch=2)
+        cold = np.asarray(sess.step(frames[0]).head)
+        warm = np.asarray(sess.step(frames[0]).head)
+        sess.reset()
+        sess.step(frames[0])
+        sess.reset(0)  # row 0 cold, row 1 stays warm
+        h = np.asarray(sess.step(frames[0]).head)
+        np.testing.assert_array_equal(h[0], cold[0])
+        np.testing.assert_array_equal(h[1], warm[1])
+
+    @pytest.mark.parametrize("mixed", [True, False])
+    def test_time_step_schedules(self, setup, mixed):
+        """Both the paper's mixed (1, 3) schedule and the uniform-T
+        baseline stream through the session path."""
+        cfg, params, bn, frames = setup
+        c = dataclasses.replace(cfg, conv_exec="gated", mixed_time=mixed)
+        d = sy.compile_detector(c, params, bn)
+        sess = d.new_session(batch=2)
+        s1, s2 = sess.step(frames[0]), sess.step(frames[1])
+        assert s1.head.shape == s2.head.shape
+        assert bool(jnp.isfinite(s1.head).all() & jnp.isfinite(s2.head).all())
+        _, head0 = d.detect(frames[0])
+        np.testing.assert_array_equal(np.asarray(s1.head), np.asarray(head0))
+
+    def test_non_snn_mode_has_no_sessions(self, setup):
+        cfg, params, bn, _ = setup
+        c = dataclasses.replace(cfg, mode="ann", conv_exec="dense")
+        d = sy.compile_detector(c, params, bn)
+        with pytest.raises(ValueError, match="mode"):
+            d.new_session()
+
+
+class TestFrameServing:
+    """Acceptance: ≥8 concurrent FrameRequests through the slot pool, with
+    compressed-executor outputs exactly matching the dense oracle."""
+
+    N_REQUESTS, N_SLOTS, N_FRAMES = 9, 4, 2
+
+    def _streams(self, cfg):
+        rng = np.random.default_rng(7)
+        h, w = cfg.input_hw
+        return [
+            (rng.integers(0, 256, (self.N_FRAMES, h, w, 3)) / 255.0).astype(np.float32)
+            for _ in range(self.N_REQUESTS)
+        ]
+
+    @pytest.mark.parametrize("executor", ["gated", "pallas"])
+    def test_slot_pool_matches_dense_oracle(self, setup, executor):
+        cfg, params, bn, _ = setup
+        streams = self._streams(cfg)
+        d = sy.compile_detector(
+            dataclasses.replace(cfg, conv_exec=executor), params, bn
+        )
+        eng = Engine(d, n_slots=self.N_SLOTS)
+        reqs = [FrameRequest(rid=r, frames=s) for r, s in enumerate(streams)]
+        for fr in reqs:
+            eng.submit(fr)
+        done = eng.run()
+        assert len(done) == self.N_REQUESTS and all(r.done for r in done)
+        assert all(len(r.out) == self.N_FRAMES for r in reqs)
+
+        # oracle: each stream through its own dense sequential session
+        dense = sy.compile_detector(
+            dataclasses.replace(cfg, conv_exec="dense"), params, bn
+        )
+        for fr in reqs:
+            solo = dense.new_session(batch=1)
+            for f, served_head, served_dets in zip(fr.frames, fr.heads, fr.out):
+                step = solo.step(f[None])
+                np.testing.assert_allclose(
+                    served_head, np.asarray(step.head[0]), atol=1e-4
+                )
+                np.testing.assert_array_equal(
+                    served_dets.valid, np.asarray(step.detections.valid[0])
+                )
+
+    def test_slot_reuse_and_admission(self, det, setup):
+        cfg, _, _, _ = setup
+        streams = self._streams(cfg)
+        eng = Engine(det, n_slots=1)  # single slot recycled for every stream
+        for r, s in enumerate(streams[:3]):
+            eng.submit(FrameRequest(rid=r, frames=s))
+        done = eng.run()
+        assert [r.rid for r in done] == [0, 1, 2]
+
+    def test_cores_satisfy_engine_api(self, det):
+        assert isinstance(DetectorEngineCore(det, n_slots=2), EngineAPI)
+        assert issubclass(LMEngineCore, object) and hasattr(LMEngineCore, "admit")
+
+    def test_bad_frames_rejected_at_admission(self, det, setup):
+        _, _, _, frames = setup
+        eng = Engine(det, n_slots=2)
+        eng.submit(FrameRequest(rid=0, frames=np.zeros((8, 8, 3))))  # no F axis
+        with pytest.raises(ValueError, match="FrameRequest"):
+            eng.run()
+
+    def test_engine_rejects_unknown_config(self):
+        with pytest.raises(TypeError, match="serve"):
+            Engine(object(), None)

@@ -121,28 +121,33 @@ class TestFullModelParity:
         rng = np.random.default_rng(0)
         # uint8-grid images: the bit-serial 8-bit encode path is then exact
         imgs = jnp.asarray(rng.integers(0, 256, (1, 24, 32, 3)) / 255.0, jnp.float32)
-        head, _, _ = sy.forward(params, bn, imgs, cfg, plan=plan)
+        # dense oracle through the compile-once handle (zero plan plumbing)
+        _, head = sy.compile_detector(cfg, params, bn).detect(imgs)
         return cfg, params, bn, plan, imgs, np.asarray(head)
 
     @pytest.mark.parametrize("executor", ["gated", "pallas"])
     def test_matches_dense_oracle(self, setup, executor):
         cfg, params, bn, plan, imgs, head_dense = setup
         c = dataclasses.replace(cfg, conv_exec=executor)
-        head, _, aux = sy.forward(params, bn, imgs, c, plan=plan)
+        _, head = sy.compile_detector(c, params, bn).detect(imgs)
         assert head.shape == head_dense.shape
         np.testing.assert_allclose(np.asarray(head), head_dense, atol=1e-4)
         # intermediate spike maps stay binary through the compressed path
+        # (forward is the internal core the handle wraps)
+        _, _, aux = sy.forward(params, bn, imgs, c, plan=plan)
         s = np.asarray(aux["spikes"]["stage4"])
         assert set(np.unique(s)).issubset({0.0, 1.0})
 
-    def test_plan_autobuilds_eagerly_and_caches(self, setup):
-        cfg, params, bn, _, imgs, head_dense = setup
+    def test_compressed_exec_requires_plan(self, setup):
+        """Plan ownership moved from the removed snn_yolo._cached_plan into
+        CompiledDetector — the free function now refuses to run a
+        compressed executor without an explicit plan and points at the
+        compile-once API."""
+        cfg, params, bn, _, imgs, _ = setup
         c = dataclasses.replace(cfg, conv_exec="pallas")
-        head, _, _ = sy.forward(params, bn, imgs, c)  # no plan passed
-        np.testing.assert_allclose(np.asarray(head), head_dense, atol=1e-4)
-        built = sy._cached_plan._entry[2]
-        sy.forward(params, bn, imgs, c)
-        assert sy._cached_plan._entry[2] is built  # not re-packed per call
+        with pytest.raises(ValueError, match="compile_detector"):
+            sy.forward(params, bn, imgs, c)  # no plan passed
+        assert not hasattr(sy, "_cached_plan")
 
     def test_non_snn_mode_rejected(self):
         """Compressed executors consume binary spikes; multibit ann/qnn/bnn

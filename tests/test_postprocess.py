@@ -1,0 +1,126 @@
+"""Detection postprocess: decode_head score thresholding (regression — the
+threshold kwarg used to be silently ignored), pure-JAX class-aware NMS, and
+the full decode→threshold→NMS serving stage."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import snn_yolo as sy
+from repro.models.postprocess import (
+    Detections,
+    class_aware_nms,
+    iou_xywh,
+    nms,
+    postprocess,
+)
+
+
+class TestDecodeHeadThreshold:
+    """Regression: decode_head(threshold=...) must actually threshold."""
+
+    def _head(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return jnp.asarray(rng.normal(0, 2.0, (2, 3, 4, 5, 8)), jnp.float32)
+
+    def test_threshold_zeroes_low_obj(self):
+        head = self._head()
+        _, obj_raw, _ = sy.decode_head(head, sy.DEFAULT_ANCHORS)
+        _, obj_thr, _ = sy.decode_head(head, sy.DEFAULT_ANCHORS, threshold=0.5)
+        below = np.asarray(obj_raw) < 0.5
+        assert below.any() and (~below).any()  # the case is non-degenerate
+        np.testing.assert_array_equal(np.asarray(obj_thr)[below], 0.0)
+        np.testing.assert_array_equal(
+            np.asarray(obj_thr)[~below], np.asarray(obj_raw)[~below]
+        )
+
+    def test_threshold_leaves_boxes_and_classes_intact(self):
+        head = self._head(1)
+        boxes_raw, _, cls_raw = sy.decode_head(head, sy.DEFAULT_ANCHORS)
+        boxes_thr, _, cls_thr = sy.decode_head(head, sy.DEFAULT_ANCHORS, threshold=0.9)
+        np.testing.assert_array_equal(np.asarray(boxes_raw), np.asarray(boxes_thr))
+        np.testing.assert_array_equal(np.asarray(cls_raw), np.asarray(cls_thr))
+
+    def test_none_threshold_is_identity(self):
+        head = self._head(2)
+        _, obj_a, _ = sy.decode_head(head, sy.DEFAULT_ANCHORS)
+        _, obj_b, _ = sy.decode_head(head, sy.DEFAULT_ANCHORS, threshold=None)
+        np.testing.assert_array_equal(np.asarray(obj_a), np.asarray(obj_b))
+
+
+class TestNMS:
+    def test_iou_suppression(self):
+        boxes = jnp.asarray([
+            [0.50, 0.50, 0.20, 0.20],   # winner
+            [0.51, 0.50, 0.20, 0.20],   # heavy overlap with winner -> dies
+            [0.90, 0.90, 0.10, 0.10],   # disjoint -> survives
+        ])
+        scores = jnp.asarray([0.9, 0.8, 0.7])
+        idx, ok = nms(boxes, scores, iou_threshold=0.5, max_out=3)
+        picked = set(np.asarray(idx)[np.asarray(ok)].tolist())
+        assert picked == {0, 2}
+
+    def test_per_class_independence(self):
+        boxes = jnp.asarray([
+            [0.5, 0.5, 0.2, 0.2],
+            [0.5, 0.5, 0.2, 0.2],  # identical box, other class
+        ])
+        scores = jnp.asarray([0.9, 0.8])
+        classes = jnp.asarray([0, 1], jnp.int32)
+        _, ok_aware = class_aware_nms(boxes, scores, classes, max_out=2)
+        assert int(ok_aware.sum()) == 2  # different classes never suppress
+        _, ok_blind = nms(boxes, scores, max_out=2)
+        assert int(ok_blind.sum()) == 1  # class-blind: duplicate dies
+
+    def test_empty_input(self):
+        idx, ok = nms(jnp.zeros((0, 4)), jnp.zeros((0,)), max_out=4)
+        assert idx.shape == (4,) and ok.shape == (4,)
+        assert not bool(ok.any())
+
+    def test_zero_scores_are_dead(self):
+        boxes = jnp.asarray([[0.5, 0.5, 0.1, 0.1], [0.2, 0.2, 0.1, 0.1]])
+        scores = jnp.asarray([0.0, 0.6])  # thresholded-out upstream
+        idx, ok = nms(boxes, scores, max_out=2)
+        picked = set(np.asarray(idx)[np.asarray(ok)].tolist())
+        assert picked == {1}
+
+    def test_ranked_by_score_and_jittable(self):
+        rng = np.random.default_rng(0)
+        boxes = jnp.asarray(rng.uniform(0.05, 0.95, (16, 4)) * [1, 1, 0.05, 0.05])
+        scores = jnp.asarray(rng.uniform(0.1, 1.0, (16,)))
+        idx, ok = jax.jit(lambda b, s: nms(b, s, max_out=8))(boxes, scores)
+        s = np.asarray(scores)[np.asarray(idx)]
+        assert (np.diff(s[np.asarray(ok)]) <= 1e-6).all()  # descending picks
+
+
+class TestPostprocess:
+    def test_shapes_and_validity(self):
+        rng = np.random.default_rng(3)
+        head = jnp.asarray(rng.normal(0, 2.0, (2, 3, 4, 5, 8)), jnp.float32)
+        dets = postprocess(head, sy.DEFAULT_ANCHORS, score_threshold=0.3,
+                           max_detections=16)
+        assert isinstance(dets, Detections)
+        assert dets.boxes.shape == (2, 16, 4)
+        assert dets.scores.shape == dets.valid.shape == (2, 16)
+        v = np.asarray(dets.valid)
+        assert (np.asarray(dets.scores)[v] > 0).all()
+        # padding rows are zeroed
+        assert (np.asarray(dets.scores)[~v] == 0).all()
+        assert (np.asarray(dets.boxes)[~v] == 0).all()
+        assert int(dets.count.max()) <= 16
+
+    def test_high_threshold_empties(self):
+        head = jnp.zeros((1, 3, 4, 5, 8))  # obj sigmoid(0)=0.5 everywhere
+        dets = postprocess(head, sy.DEFAULT_ANCHORS, score_threshold=0.95)
+        assert int(dets.count[0]) == 0
+
+    def test_iou_xywh_known_values(self):
+        a = jnp.asarray([0.5, 0.5, 0.2, 0.2])
+        assert float(iou_xywh(a, a)) == pytest.approx(1.0)
+        b = jnp.asarray([0.9, 0.9, 0.05, 0.05])
+        assert float(iou_xywh(a, b)) == 0.0
+        # half-overlapping equal squares: IoU = 1/3
+        c = jnp.asarray([0.6, 0.5, 0.2, 0.2])
+        assert float(iou_xywh(a, c)) == pytest.approx(1 / 3, abs=1e-6)
