@@ -16,6 +16,7 @@ def main(argv=None):
 
     from benchmarks import (
         e2e_detector,
+        eval_map,
         fig3_density,
         fig5_miout,
         fig6_parallelism,
@@ -40,6 +41,14 @@ def main(argv=None):
         ("table3_hw", lambda: table3_hw.run()),
         ("kernel_bench", lambda: kernel_bench.run()),
         ("e2e_detector", lambda: e2e_detector.run()),
+        # accuracy: --fast trains a smoke-scale pipeline (mAP then NOT
+        # representative); the full run reproduces the checked-in BENCH_eval
+        ("eval_map", lambda: eval_map.run(
+            steps=60 if args.fast else 3500,
+            finetune_steps=20 if args.fast else 600,
+            batch=4 if args.fast else 6,
+            eval_images=8 if args.fast else 48,
+        )),
         ("serve_bench", lambda: serve_bench.run()),
         ("roofline", lambda: roofline.run()),
     ]

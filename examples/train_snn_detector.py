@@ -17,9 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
 from repro.core import pruning, quant
 from repro.data import synthetic_detection as sd
+from repro.eval import harness
 from repro.models import snn_yolo as sy
 from repro.train import checkpoint as ckpt
 from repro.train import ft
@@ -31,14 +31,13 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--ckpt", default="/tmp/snn_det_ckpt")
+    ap.add_argument("--eval-images", type=int, default=16,
+                    help="val images for the post-training mAP report")
     args = ap.parse_args(argv)
 
-    cfg = dataclasses.replace(
-        get_config("snn-det"),
-        input_hw=(96, 160), stem_channels=8, conv_block_channels=16,
-        stage_channels=((16, 16), (16, 32), (32, 64)), pooled_stages=3,
-        use_block_conv=False,
-    )
+    # the harness's trainable-size config (96x160, thinner channels) so the
+    # reported mAP is comparable with BENCH_eval.json
+    cfg = harness.demo_config()
     ocfg = opt.AdamWConfig(lr_peak=2e-3, lr_init=2e-4, lr_final=2e-5,
                            warmup_steps=20, total_steps=args.steps,
                            weight_decay=1e-3)
@@ -66,7 +65,7 @@ def main(argv=None):
         return {"params": new_params, "bn": new_bn, "opt": new_opt}, loss
 
     # reduced config downsamples /16 (stem + conv + 2 stage pools), not /32
-    grid_div = 2 ** (2 + cfg.pooled_stages - 1)
+    grid_div = harness.grid_div(cfg)
     stream = sd.batches(args.batch, hw=cfg.input_hw, steps=args.steps, grid_div=grid_div)
     losses = []
 
@@ -96,13 +95,30 @@ def main(argv=None):
         lambda x: quant.fake_quant_tensor(x, bits=8) if x.ndim == 4 else x, pruned
     )
     det = sy.compile_detector(cfg, q, state["bn"])
-    imgs = jnp.asarray(next(sd.batches(2, hw=cfg.input_hw, steps=1))["image"])
+    imgs = jnp.asarray(next(sd.batches(2, hw=cfg.input_hw, steps=1,
+                                       grid_div=grid_div))["image"])
     dets, head = det.detect(imgs)
     print(f"pruned: kept {rep['kept_frac']*100:.1f}% of {rep['total_params']/1e3:.0f}k "
           f"params (paper SNN-b: 30%)")
     print(f"SNN-d compile_detector OK: head {head.shape}, "
           f"finite={bool(jnp.all(jnp.isfinite(head)))}, "
           f"detections/frame {[int(c) for c in dets.count]}")
+
+    # --- accuracy: mAP@0.5 on the synthetic val split, trained vs SNN-d
+    # (the eval subsystem; benchmarks/eval_map.py runs the full Table I /
+    # Fig 15 pipeline and writes BENCH_eval.json) ---
+    # "trained" evaluates FLOAT weights (weight_bits=0, no plan) exactly
+    # like the harness's trained stage, so the two reports are comparable
+    for tag, (c, p, b) in {
+        "trained": (dataclasses.replace(cfg, weight_bits=0), params, state["bn"]),
+        "pruned+quant": (cfg, q, state["bn"]),
+    }.items():
+        r = harness.evaluate_detector(
+            harness.compile_eval_detector(c, p, b), n_images=args.eval_images
+        )
+        aps = ", ".join(f"{a:.3f}" for a in r["per_class_ap"])
+        print(f"mAP@0.5 [{tag}] {r['map']:.3f} (per-class {aps}) "
+              f"on {r['n_images']} val images")
     if losses[-1] >= losses[0]:
         raise SystemExit("loss did not decrease")
     print("train_snn_detector OK")

@@ -21,6 +21,7 @@ with [tx, ty, tw, th, obj, cls...].
 from __future__ import annotations
 
 import functools
+import zlib
 from typing import Iterator, Optional
 
 import numpy as np
@@ -29,6 +30,32 @@ CLASSES = ("vehicle", "bike", "pedestrian")
 CLASS_P = np.array([0.55, 0.22, 0.23])
 # per-class (mean_area_frac, aspect w/h)
 SIZE_STATS = {0: (0.015, 1.9), 1: (0.004, 0.7), 2: (0.003, 0.45)}
+
+# Anchor shapes in grid-cell units. Numerically pinned copy of
+# repro.models.snn_yolo.DEFAULT_ANCHORS so the data pipeline stays
+# numpy-only (tests/test_data.py asserts the two never diverge). Targets
+# encode tw/th log-scale against the best-shape-IoU anchor — the exact
+# inverse of snn_yolo.decode_head, so a trained head decodes to the boxes
+# it was supervised on.
+ANCHORS = ((1.0, 1.0), (2.0, 2.0), (4.0, 2.5), (2.5, 4.0), (6.0, 6.0))
+
+
+def split_seed(split: str, index: int) -> int:
+    """Deterministic per-(split, index) seed. zlib.crc32 — NOT Python's
+    ``hash``, which is salted per process and would silently break the
+    "reproducible across hosts" contract without PYTHONHASHSEED."""
+    return (zlib.crc32(split.encode("utf-8")) & 0xFFFF) * 1_000_003 + index
+
+
+def _best_anchor(bw_cells: float, bh_cells: float, anchors) -> int:
+    """Anchor with max shape-IoU (boxes concentric, sizes in cell units)."""
+    best, best_iou = 0, -1.0
+    for a, (aw, ah) in enumerate(anchors):
+        inter = min(bw_cells, aw) * min(bh_cells, ah)
+        iou = inter / (bw_cells * bh_cells + aw * ah - inter)
+        if iou > best_iou:
+            best, best_iou = a, iou
+    return best
 
 
 def _render_image(rng, hw, boxes, classes):
@@ -53,10 +80,9 @@ def _render_image(rng, hw, boxes, classes):
 
 
 def sample(index: int, *, split: str = "train", hw=(576, 1024), num_classes: int = 3,
-           num_anchors: int = 5, grid_div: int = 32):
+           num_anchors: int = 5, grid_div: int = 32, anchors=ANCHORS):
     """Deterministic (image, target, boxes) for one index."""
-    seed = (hash(split) & 0xFFFF) * 1_000_003 + index
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(split_seed(split, index))
     n_obj = int(rng.integers(1, 13))
     classes = rng.choice(num_classes, size=n_obj, p=CLASS_P)
     boxes = []
@@ -76,8 +102,15 @@ def sample(index: int, *, split: str = "train", hw=(576, 1024), num_classes: int
     tgt = np.zeros((gh, gw, num_anchors, 5 + num_classes), np.float32)
     for (cx, cy, bw, bh), c in zip(boxes, classes):
         gx, gy = min(int(cx * gw), gw - 1), min(int(cy * gh), gh - 1)
-        a = int(rng.integers(0, num_anchors))
-        tgt[gy, gx, a, 0:4] = (cx * gw - gx, cy * gh - gy, bw, bh)
+        # anchor by shape IoU, tw/th log-scale vs that anchor — the exact
+        # inverse of decode_head (bw = aw * exp(tw) / gw), so decode(head)
+        # reproduces the ground truth when the head fits the targets
+        a = _best_anchor(bw * gw, bh * gh, anchors[:num_anchors])
+        aw, ah = anchors[a]
+        tgt[gy, gx, a, 0:4] = (
+            cx * gw - gx, cy * gh - gy,
+            np.log(max(bw * gw / aw, 1e-6)), np.log(max(bh * gh / ah, 1e-6)),
+        )
         tgt[gy, gx, a, 4] = 1.0
         tgt[gy, gx, a, 5 + int(c)] = 1.0
     return img, tgt, (boxes, classes)
@@ -91,11 +124,15 @@ def batches(
     steps: Optional[int] = None,
     host_id: int = 0,
     n_hosts: int = 1,
+    start_index: int = 0,
     **kw,
 ) -> Iterator[dict]:
     """Host-sharded deterministic batch stream: host h yields indices
-    h, h+n_hosts, ... so the global batch is disjoint across hosts."""
-    i = 0
+    h, h+n_hosts, ... so the global batch is disjoint across hosts.
+    ``start_index`` skips the first ``start_index`` per-host samples —
+    resuming (or fine-tuning past) a consumed prefix without replaying it,
+    composable with host striping."""
+    i = start_index
     step = 0
     while steps is None or step < steps:
         imgs, tgts = [], []
@@ -106,3 +143,19 @@ def batches(
             i += 1
         yield {"image": np.stack(imgs), "target": np.stack(tgts)}
         step += 1
+
+
+def eval_set(n_images: int, *, split: str = "val", hw=(576, 1024), **kw):
+    """Fixed evaluation split for the mAP harness: returns
+    (images (N,H,W,3), ground_truths) where ground_truths[i] is the
+    {"boxes" (G,4) xywh-normalized, "classes" (G,)} dict
+    ``repro.eval.detection_map`` consumes."""
+    imgs, gts = [], []
+    for i in range(n_images):
+        img, _, (boxes, classes) = sample(i, split=split, hw=hw, **kw)
+        imgs.append(img)
+        gts.append({
+            "boxes": np.asarray(boxes, np.float32).reshape(-1, 4),
+            "classes": np.asarray(classes, np.int64).reshape(-1),
+        })
+    return np.stack(imgs), gts

@@ -97,6 +97,29 @@ def pack_conv_weights(
     )
 
 
+def unpack_conv_weights(pw: PackedConvWeights) -> np.ndarray:
+    """Inverse of :func:`pack_conv_weights`: reconstruct the dense int8
+    kernel (kh, kw, cin_padded, kout) from {maskp, vals}. Host-side; used
+    by the pack→unpack round-trip property tests — the compressed form
+    must be information-preserving for every sparsity pattern, or the
+    kernel is silently computing with a different model."""
+    maskp = np.asarray(pw.maskp)
+    vals = np.asarray(pw.vals)
+    kb_total, taps, c8, kblk = maskp.shape
+    cin_p = c8 * 8
+    w = np.zeros((taps, cin_p, kb_total * kblk), np.int8)
+    for kb in range(kb_total):
+        # unpack bit c%8 of word c//8 back to channel c (pack order)
+        bits = np.stack(
+            [(maskp[kb] >> b) & 1 for b in range(8)], axis=2
+        )  # (taps, C8, 8, KBLK)
+        mask = bits.reshape(taps, cin_p, kblk).astype(bool)
+        block = np.zeros((taps, cin_p, kblk), np.int8)
+        block[mask] = vals[kb, : int(mask.sum())]  # C-order, matching pack
+        w[:, :, kb * kblk : (kb + 1) * kblk] = block
+    return w.reshape(pw.kh, pw.kw, cin_p, kb_total * kblk)[..., : pw.kout]
+
+
 def validate_packed(pw: PackedConvWeights) -> None:
     """Check that every K-block's nonzero count fits the packed-value
     buffer. The kernel clips gather indices into ``vals`` (it cannot

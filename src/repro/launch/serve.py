@@ -55,10 +55,23 @@ def _serve_detector(cfg, args):
     params, bn, rng = demo_weights(cfg)
     det = sy.compile_detector(cfg, params, bn)
     eng = Engine(det, n_slots=args.slots)
-    total_frames = args.requests * args.frames
-    for r, frames in enumerate(
-        synth_streams(rng, args.requests, args.frames, cfg.input_hw)
-    ):
+    gts = None
+    if args.eval_map:
+        # serve the synthetic val split (one frame per request — each
+        # admission cold-starts its slot) and score the SERVED detections
+        from repro.data import synthetic_detection as sd
+        from repro.eval.harness import grid_div
+
+        images, gts = sd.eval_set(
+            args.requests, hw=cfg.input_hw, grid_div=grid_div(cfg),
+            num_anchors=cfg.num_anchors, num_classes=cfg.num_classes,
+        )
+        streams = [img[None] for img in images]
+        total_frames = args.requests
+    else:
+        streams = synth_streams(rng, args.requests, args.frames, cfg.input_hw)
+        total_frames = args.requests * args.frames
+    for r, frames in enumerate(streams):
         eng.submit(FrameRequest(rid=r, frames=frames))
     t0 = time.time()
     done = eng.run()
@@ -71,6 +84,17 @@ def _serve_detector(cfg, args):
     for r in sorted(done, key=lambda r: r.rid)[:3]:
         counts = [int(d.count) for d in r.out]
         print(f"  req {r.rid}: {len(r.out)} frames, detections/frame {counts}")
+    if gts is not None:
+        from repro.eval import detection_map as dm
+
+        preds = [r.out[0] for r in sorted(done, key=lambda r: r.rid)]
+        rep = dm.evaluate_detections(
+            preds, gts, num_classes=cfg.num_classes, iou_threshold=0.5
+        )
+        print(f"  served-detections mAP@0.5 {rep['map']:.3f} over "
+              f"{rep['n_images']} val frames at the serving score threshold "
+              f"({det.score_threshold}) — demo weights are random-calibrated; "
+              "load a trained checkpoint for representative accuracy")
 
 
 def main(argv=None):
@@ -85,6 +109,9 @@ def main(argv=None):
     ap.add_argument("--conv-exec", default="gated",
                     choices=["dense", "gated", "pallas"],
                     help="detector conv executor (snn-det only)")
+    ap.add_argument("--eval-map", action="store_true",
+                    help="serve the synthetic val split and report mAP@0.5 "
+                         "of the SERVED detections (snn-det only)")
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args(argv)
 

@@ -458,6 +458,13 @@ def decode_head(head, anchors, *, threshold=None):
     """YOLOv2 box decode. head: (N, gh, gw, A, 5+C) raw.
     Returns (boxes_xywh [0-1 normalized], obj, class_probs).
 
+    This is the EXACT inverse of the training-target encoding
+    (``data/synthetic_detection.sample``: best-shape-IoU anchor, tx/ty as
+    within-cell offsets, tw/th log-scale vs that anchor) — a head that
+    fits its targets decodes to the ground-truth boxes, which is what
+    makes ``repro.eval.detection_map`` mAP meaningful
+    (tests/test_eval_map.py pins the round trip at mAP 1.0).
+
     ``threshold``: score threshold on the objectness — boxes whose obj
     score falls below it get obj zeroed, so downstream stages (NMS, the
     serve postprocess) can treat obj > 0 as the validity mask. Box
@@ -505,7 +512,9 @@ def compile_detector(cfg: SNNDetConfig, params, bn_state=None, **kwargs):
 def yolo_loss(head, targets, anchors=DEFAULT_ANCHORS, *, l_coord=5.0, l_noobj=0.5):
     """YOLOv2-style loss. targets: (N, gh, gw, A, 5+C) with
     [tx, ty, tw, th, obj, onehot-classes]; obj∈{0,1} marks assigned anchors.
-    tx/ty are within-cell offsets in (0,1); tw/th are log-scale vs anchor."""
+    tx/ty are within-cell offsets in (0,1); tw/th are log-scale vs the
+    assigned anchor — the ``decode_head`` inverse domain, so minimizing
+    this loss directly maximizes decoded-box IoU (see decode_head)."""
     obj_mask = targets[..., 4]
     noobj_mask = 1.0 - obj_mask
     pxy = jax.nn.sigmoid(head[..., 0:2])

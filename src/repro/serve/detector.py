@@ -95,10 +95,13 @@ class CompiledDetector:
                 "float weights only run through the dense oracle"
             )
         # the compile step: one pass over the tree. The plan is the handle's
-        # owned artifact; the dense executor never reads it, so a dense
-        # handle defers packing until someone asks (`.plan` — e.g. the
-        # compression-accounting benchmarks).
-        self._plan = cplan.build_plan(params, cfg) if cfg.conv_exec != "dense" else None
+        # owned artifact, built for EVERY quantized handle — dense included:
+        # the dense executor consumes the plan's w_q/scale so all three
+        # executors run the same integer-domain accumulate-then-scale math
+        # and agree bit-exactly (tests/conformance/ asserts it). Only
+        # weight_bits=0 (float) handles have nothing to pack and keep the
+        # legacy fake-quant float path.
+        self._plan = cplan.build_plan(params, cfg) if cfg.weight_bits else None
         # staleness fingerprint: identity of every weight leaf at compile
         # time. A swapped/mutated leaf means the packed plan and the jitted
         # constants are lying about the model -> refuse loudly.
@@ -123,12 +126,9 @@ class CompiledDetector:
 
     @property
     def plan(self):
-        """The owned DetectorPlan (built lazily for dense handles, where
-        the executor runs straight off the quantized weights). None only
-        when weight_bits=0 (nothing to compress)."""
-        if self._plan is None and self.cfg.weight_bits:
-            self.check_plan()
-            self._plan = cplan.build_plan(self.params, self.cfg)
+        """The owned DetectorPlan, built exactly once at compile time.
+        None only when weight_bits=0 (float weights: nothing to compress,
+        and the forward runs the legacy fake-quant path)."""
         return self._plan
 
     # ------------------------------------------------------------- checks --

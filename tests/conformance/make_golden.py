@@ -1,0 +1,33 @@
+"""Regenerate the checked-in conformance fixture from the dense oracle.
+
+    PYTHONPATH=src python tests/conformance/make_golden.py
+
+Only rerun when the detector's numerics intentionally change (new
+quantization scheme, different NMS, ...) — the whole point of the fixture
+is that unintentional drift fails tests/conformance/test_conformance.py.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import golden  # noqa: E402
+
+
+def main():
+    params, bn, frames = golden.build_inputs()
+    ref = golden.run_executor("dense", params, bn, frames)
+    ref["frames"] = np.asarray(frames)
+    os.makedirs(os.path.dirname(golden.FIXTURE), exist_ok=True)
+    np.savez_compressed(golden.FIXTURE, **ref)
+    size = os.path.getsize(golden.FIXTURE)
+    print(f"wrote {golden.FIXTURE} ({size/1024:.1f} KiB, {len(ref)} arrays)")
+    for k in sorted(ref):
+        print(f"  {k:20s} {ref[k].shape} {ref[k].dtype}")
+
+
+if __name__ == "__main__":
+    main()

@@ -66,14 +66,22 @@ class TestCompiledDetector:
         det(frames[1])
         assert det.plan is plan  # compiled once, never re-packed per call
 
-    def test_dense_handle_builds_plan_lazily(self, setup):
+    def test_dense_handle_owns_plan_and_float_handle_has_none(self, setup):
+        """Quantized dense handles build the plan at compile time too —
+        the dense executor reads its w_q/scale so every executor runs the
+        same integer-domain math (the conformance suite's bit-exactness
+        guarantee). Float handles have nothing to pack."""
         cfg, params, bn, frames = setup
         d = sy.compile_detector(cfg, params, bn)  # dense executor
-        assert d._plan is None  # nothing packed at compile time
+        plan = d.plan
+        assert plan is not None and plan.compressed_bytes < plan.dense_bytes
         d(frames[0])
-        assert d._plan is None  # ...nor on the serving path
-        plan = d.plan  # compression accounting builds on demand
-        assert plan is not None and d.plan is plan
+        assert d.plan is plan  # compiled once, never re-packed
+        f = sy.compile_detector(
+            dataclasses.replace(cfg, weight_bits=0), params, bn
+        )
+        assert f.plan is None  # float weights: legacy fake-quant path
+        f(frames[0])  # still serves
 
     def test_stale_params_raise(self, setup):
         cfg, params, bn, frames = setup
@@ -261,8 +269,10 @@ class TestFrameServing:
             solo = dense.new_session(batch=1)
             for f, served_head, served_dets in zip(fr.frames, fr.heads, fr.out):
                 step = solo.step(f[None])
-                np.testing.assert_allclose(
-                    served_head, np.asarray(step.head[0]), atol=1e-4
+                # bit-exact: compressed executors share the dense oracle's
+                # integer-domain math (tests/conformance/)
+                np.testing.assert_array_equal(
+                    served_head, np.asarray(step.head[0])
                 )
                 np.testing.assert_array_equal(
                     served_dets.valid, np.asarray(step.detections.valid[0])

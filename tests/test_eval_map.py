@@ -1,0 +1,190 @@
+"""Hand-computed fixtures for repro.eval.detection_map: known AP values
+for small synthetic prediction sets (duplicate detections, no-prediction
+classes, cross-image ranking, localization misses) plus the
+target-encoding ↔ decode_head inverse contract."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.data import synthetic_detection as sd
+from repro.eval import detection_map as dm
+from repro.models import snn_yolo as sy
+from repro.models.postprocess import Detections, postprocess
+
+
+def box(cx, cy, w, h):
+    return np.array([cx, cy, w, h], np.float64)
+
+
+class TestIoU:
+    def test_identical_boxes(self):
+        b = box(0.5, 0.5, 0.2, 0.2)[None]
+        np.testing.assert_allclose(dm.iou_matrix_xywh(b, b), [[1.0]])
+
+    def test_disjoint_boxes(self):
+        a = box(0.2, 0.2, 0.1, 0.1)[None]
+        b = box(0.8, 0.8, 0.1, 0.1)[None]
+        np.testing.assert_allclose(dm.iou_matrix_xywh(a, b), [[0.0]])
+
+    def test_half_shift_is_one_third(self):
+        # inter = 0.1*0.2 = 0.02, union = 0.04+0.04-0.02 = 0.06 -> 1/3
+        a = box(0.5, 0.5, 0.2, 0.2)[None]
+        b = box(0.6, 0.5, 0.2, 0.2)[None]
+        np.testing.assert_allclose(dm.iou_matrix_xywh(a, b), [[1 / 3]], atol=1e-9)
+
+
+class TestMatching:
+    def test_higher_score_matches_first(self):
+        """Greedy VOC rule: the 0.9 pred takes the only GT even though the
+        0.8 pred overlaps it more — the late duplicate is a FP."""
+        gt = box(0.5, 0.5, 0.2, 0.2)[None]
+        preds = np.stack([box(0.52, 0.5, 0.2, 0.2), box(0.5, 0.5, 0.2, 0.2)])
+        tp = dm.match_image(preds, np.array([0.9, 0.8]), gt)
+        np.testing.assert_array_equal(tp, [True, False])
+
+    def test_below_threshold_is_fp(self):
+        gt = box(0.5, 0.5, 0.2, 0.2)[None]
+        pred = box(0.8, 0.8, 0.2, 0.2)[None]
+        tp = dm.match_image(pred, np.array([0.9]), gt, iou_threshold=0.5)
+        np.testing.assert_array_equal(tp, [False])
+
+    def test_empty_inputs(self):
+        assert dm.match_image(np.zeros((0, 4)), np.zeros(0), np.zeros((1, 4))).size == 0
+        np.testing.assert_array_equal(
+            dm.match_image(np.zeros((1, 4)), np.ones(1), np.zeros((0, 4))), [False]
+        )
+
+
+class TestAveragePrecision:
+    def test_perfect_detector_ap_1(self):
+        assert dm.average_precision(np.array([0.9]), np.array([True]), 1) == 1.0
+
+    def test_no_predictions_present_class_ap_0(self):
+        assert dm.average_precision(np.zeros(0), np.zeros(0, bool), 3) == 0.0
+
+    def test_absent_class_is_nan(self):
+        assert np.isnan(dm.average_precision(np.array([0.5]), np.array([False]), 0))
+
+    def test_duplicate_detection_hand_computed(self):
+        """2 GT. Ranked [TP, dup-FP, TP] -> recall (.5,.5,1), precision
+        (1,.5,2/3), envelope (1,2/3,2/3): AP = .5*1 + .5*2/3 = 5/6."""
+        scores = np.array([0.9, 0.8, 0.7])
+        tp = np.array([True, False, True])
+        assert dm.average_precision(scores, tp, 2) == pytest.approx(5 / 6)
+
+    def test_trailing_fp_after_full_recall_free(self):
+        """VOC envelope: an FP ranked after recall has reached 1.0 does not
+        reduce AP (precision envelope at r=1 is still 1)."""
+        assert dm.average_precision(
+            np.array([0.9, 0.1]), np.array([True, False]), 1
+        ) == pytest.approx(1.0)
+
+    def test_fp_ranked_first_hand_computed(self):
+        """Ranked [FP(.9), TP(.8)] over 2 GT -> AP = .5 * .5 = .25."""
+        assert dm.average_precision(
+            np.array([0.9, 0.8]), np.array([False, True]), 2
+        ) == pytest.approx(0.25)
+
+
+class TestEvaluateDetections:
+    def test_perfect_single_image(self):
+        gt = [{"boxes": box(0.5, 0.5, 0.2, 0.2)[None], "classes": np.array([0])}]
+        pred = [{"boxes": box(0.5, 0.5, 0.2, 0.2)[None],
+                 "scores": np.array([0.9]), "classes": np.array([0])}]
+        r = dm.evaluate_detections(pred, gt, num_classes=3)
+        assert r["map"] == 1.0
+        assert r["per_class_ap"][0] == 1.0
+        assert np.isnan(r["per_class_ap"][1]) and np.isnan(r["per_class_ap"][2])
+        assert r["n_gt"] == [1, 0, 0]
+
+    def test_unpredicted_present_class_drags_mean(self):
+        """class0 found (AP 1), class1 present but never predicted (AP 0)
+        -> mAP 0.5."""
+        gt = [{
+            "boxes": np.stack([box(0.3, 0.3, 0.2, 0.2), box(0.7, 0.7, 0.2, 0.2)]),
+            "classes": np.array([0, 1]),
+        }]
+        pred = [{"boxes": box(0.3, 0.3, 0.2, 0.2)[None],
+                 "scores": np.array([0.9]), "classes": np.array([0])}]
+        r = dm.evaluate_detections(pred, gt, num_classes=2)
+        assert r["map"] == pytest.approx(0.5)
+
+    def test_fp_on_absent_class_not_counted(self):
+        """Predictions for a class with zero GT are excluded from the mean
+        (VOC behavior) — they don't nuke mAP to 0."""
+        gt = [{"boxes": box(0.5, 0.5, 0.2, 0.2)[None], "classes": np.array([0])}]
+        pred = [{
+            "boxes": np.stack([box(0.5, 0.5, 0.2, 0.2), box(0.2, 0.2, 0.1, 0.1)]),
+            "scores": np.array([0.9, 0.8]),
+            "classes": np.array([0, 1]),
+        }]
+        r = dm.evaluate_detections(pred, gt, num_classes=2)
+        assert r["map"] == 1.0 and np.isnan(r["per_class_ap"][1])
+
+    def test_cross_image_ranking_hand_computed(self):
+        """Pooled ranking across images: img1 has a high-score FP, img2 a
+        lower-score TP -> ranked [FP, TP], 2 GT total, AP = 0.25."""
+        gts = [
+            {"boxes": box(0.5, 0.5, 0.2, 0.2)[None], "classes": np.array([0])},
+            {"boxes": box(0.5, 0.5, 0.2, 0.2)[None], "classes": np.array([0])},
+        ]
+        preds = [
+            {"boxes": box(0.9, 0.9, 0.05, 0.05)[None],
+             "scores": np.array([0.9]), "classes": np.array([0])},
+            {"boxes": box(0.5, 0.5, 0.2, 0.2)[None],
+             "scores": np.array([0.8]), "classes": np.array([0])},
+        ]
+        r = dm.evaluate_detections(preds, gts, num_classes=1)
+        assert r["map"] == pytest.approx(0.25)
+
+    def test_map50_of_empty_split_is_nan(self):
+        assert np.isnan(dm.map50([], [], num_classes=3))
+
+    def test_accepts_detections_namedtuple_rows(self):
+        dets = Detections(
+            boxes=np.array([[[0.5, 0.5, 0.2, 0.2], [0.0, 0.0, 0.0, 0.0]]]),
+            scores=np.array([[0.9, 0.0]]),
+            classes=np.array([[0, 0]]),
+            valid=np.array([[True, False]]),
+        )
+        gt = [{"boxes": box(0.5, 0.5, 0.2, 0.2)[None], "classes": np.array([0])}]
+        assert dm.map50(dm.detections_to_predictions(dets), gt, num_classes=1) == 1.0
+        assert dm.map50([dets.row(0)], gt, num_classes=1) == 1.0
+
+
+class TestTargetDecodeInverse:
+    """synthetic_detection targets and snn_yolo.decode_head are exact
+    inverses: a head built from a sample's target tensor must decode and
+    postprocess to mAP 1.0 against that sample's ground-truth boxes."""
+
+    def test_anchors_pinned_to_model(self):
+        assert sd.ANCHORS == sy.DEFAULT_ANCHORS
+
+    def _head_from_target(self, tgt):
+        """Invert decode_head: txy -> logit(offset), twh passthrough,
+        obj/cls -> saturated logits."""
+        head = np.zeros_like(tgt)
+        off = np.clip(tgt[..., 0:2], 1e-4, 1 - 1e-4)
+        head[..., 0:2] = np.log(off / (1 - off))
+        head[..., 2:4] = tgt[..., 2:4]
+        head[..., 4] = np.where(tgt[..., 4] > 0, 12.0, -12.0)
+        head[..., 5:] = np.where(tgt[..., 5:] > 0, 12.0, -12.0)
+        return head[None]
+
+    def test_oracle_head_reaches_map_1(self):
+        hw, grid_div = (96, 160), 16
+        for idx in range(25):
+            img, tgt, (boxes, classes) = sd.sample(idx, split="val", hw=hw,
+                                                   grid_div=grid_div)
+            if int(tgt[..., 4].sum()) == len(boxes):  # no cell/anchor collisions
+                break
+        else:
+            pytest.fail("no collision-free sample in the first 25 val indices")
+        dets = postprocess(self._head_from_target(tgt), sy.DEFAULT_ANCHORS,
+                           score_threshold=0.25, max_detections=32)
+        gt = [{"boxes": np.asarray(boxes, np.float64),
+               "classes": np.asarray(classes, np.int64)}]
+        score = dm.map50(dm.detections_to_predictions(dets), gt,
+                         num_classes=len(sd.CLASSES))
+        assert score == pytest.approx(1.0, abs=1e-6)

@@ -1,0 +1,165 @@
+"""Property-test hardening (hypothesis via tests/hyp_compat.py — degrades
+to explicit skips when hypothesis is absent) plus the deterministic edge
+cases the properties are anchored on:
+
+* bitmask pack → unpack round-trips EVERY sparsity pattern, including
+  all-zero kernels and K-blocks sitting exactly on the VPAD boundary,
+* FXP quantize/dequantize error is bounded by scale/2 with the int8
+  payload honoring its bounds,
+* the 16-bit accumulator claim (core/quant.ACC_BITS — previously
+  "asserted in tests" with no test calling acc_range_ok) holds at the
+  paper's layer sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hyp_compat import given, settings, st
+
+from repro.core import pruning, quant
+from repro.kernels import ops
+
+
+def _sparse_int8(rng, kh, kw, cin, k, density):
+    w = rng.integers(-127, 128, (kh, kw, cin, k)).astype(np.int8)
+    mask = rng.random((kh, kw, cin, k)) < density
+    return (w * mask).astype(np.int8)
+
+
+def _assert_roundtrip(w, **pack_kw):
+    pw = ops.pack_conv_weights(w, **pack_kw)
+    got = ops.unpack_conv_weights(pw)
+    cin = w.shape[2]
+    np.testing.assert_array_equal(got[:, :, :cin, :], w)
+    # channel padding must be zeros, never stray values
+    np.testing.assert_array_equal(got[:, :, cin:, :], 0)
+
+
+class TestPackRoundtrip:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        st.integers(0, 10_000),
+        st.sampled_from([1, 3]),
+        st.integers(1, 12),
+        st.integers(1, 20),
+        st.sampled_from([8, 16]),
+        st.floats(0.0, 1.0),
+    )
+    def test_roundtrip_property(self, seed, kh, cin, k, kblk, density):
+        """pack→unpack is the identity for any shape × sparsity pattern."""
+        rng = np.random.default_rng(seed)
+        _assert_roundtrip(_sparse_int8(rng, kh, kh, cin, k, density), kblk=kblk)
+
+    def test_all_zero_kernel(self):
+        """nnz = 0 everywhere: vals degenerates to the 1-entry pad buffer
+        and the masks must decode back to all-zeros."""
+        w = np.zeros((3, 3, 8, 16), np.int8)
+        pw = ops.pack_conv_weights(w, kblk=8)
+        assert int(np.asarray(pw.tap_any).sum()) == 0
+        _assert_roundtrip(w, kblk=8)
+
+    def test_one_kblock_all_zero_between_dense_blocks(self):
+        """A dead K-block sandwiched between live ones keeps its vals row
+        padded and decodes to zeros (per-block offsets must not slip)."""
+        w = _sparse_int8(np.random.default_rng(0), 3, 3, 8, 24, 0.5)
+        w[..., 8:16] = 0  # middle K-block dead
+        _assert_roundtrip(w, kblk=8)
+
+    def test_vpad_boundary_exact_fit(self):
+        """vpad == max per-block nnz is legal (the boundary case the
+        kernel's clipped gather depends on) — and one less must raise."""
+        w = _sparse_int8(np.random.default_rng(1), 3, 3, 8, 8, 0.4)
+        pw0 = ops.pack_conv_weights(w, kblk=8)
+        max_nnz = max(
+            int(np.count_nonzero(w[..., kb * 8 : (kb + 1) * 8]))
+            for kb in range(w.shape[-1] // 8)
+        )
+        _assert_roundtrip(w, kblk=8, vpad=max_nnz)
+        assert pw0.vals.shape[1] == max_nnz
+        with pytest.raises(ValueError, match="vpad"):
+            ops.pack_conv_weights(w, kblk=8, vpad=max_nnz - 1)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(1, 8))
+    def test_vpad_padding_roundtrips(self, seed, extra):
+        """Over-padded vals (uniform VPAD across a plan) change nothing."""
+        rng = np.random.default_rng(seed)
+        w = _sparse_int8(rng, 3, 3, 4, 8, 0.3)
+        _assert_roundtrip(w, kblk=8, vpad=int(np.count_nonzero(w)) + extra)
+
+
+class TestQuantProperties:
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 10_000), st.floats(1e-3, 1e3), st.sampled_from([4, 8]))
+    def test_roundtrip_error_le_half_scale(self, seed, spread, bits):
+        """|dequant(quantize(x)) − x| <= scale/2 everywhere (symmetric
+        round-to-nearest), int8 payload within [-2^(b-1), 2^(b-1)-1]."""
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal(64).astype(np.float32) * spread)
+        qx = quant.quantize(x, bits=bits)
+        qmax = 2 ** (bits - 1) - 1
+        q = np.asarray(qx.q)
+        assert q.dtype == np.int8
+        assert q.min() >= -qmax - 1 and q.max() <= qmax
+        err = np.abs(np.asarray(quant.dequantize(qx)) - np.asarray(x))
+        assert err.max() <= float(qx.scale) / 2 + 1e-6
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_per_channel_error_bound(self, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((8, 16)).astype(np.float32))
+        qx = quant.quantize(x, axis=1)
+        err = np.abs(np.asarray(quant.dequantize(qx)) - np.asarray(x))
+        assert np.all(err <= np.asarray(qx.scale) / 2 + 1e-6)
+
+
+class TestAccumulator16Bit:
+    """core/quant.py claims 16-bit accumulators "asserted in tests, not
+    enforced" — these are those tests, at the paper's layer sizes."""
+
+    @pytest.fixture(scope="class")
+    def paper_plan(self):
+        from repro.configs import get_config
+        from repro.core import plan as cplan
+        from repro.models import snn_yolo as sy
+
+        cfg = get_config("snn-det")  # full channel plan (3.17M params)
+        params, _ = sy.init_params(jax.random.PRNGKey(0), cfg)
+        params = pruning.prune_tree(params, 0.8)
+        return cplan.build_plan(params, cfg)
+
+    def test_worst_case_acc_within_16b_at_paper_sizes(self, paper_plan):
+        """Analytic bound: no binary-spike input can overflow a 16-bit
+        accumulator on ANY layer of the full pruned+quantized model."""
+        lim = 2 ** (quant.ACC_BITS - 1)
+        worst = {
+            name: quant.conv_acc_worst_case(np.asarray(lp.w_q))
+            for name, lp in paper_plan.layers.items()
+        }
+        assert all(v < lim for v in worst.values()), f"16b overflow: {worst}"
+        # the late 3×3 stages are the widest accumulations — sanity-check
+        # the bound is actually exercising them, not trivially zero
+        assert worst["stage4/main_a"] > 1_000
+
+    def test_acc_range_ok_on_real_accumulation(self, paper_plan):
+        """Empirical: run the int8 conv accumulation (worst-case all-ones
+        spikes) through the widest layer and the encode layer; the int32
+        result must satisfy acc_range_ok and the analytic bound."""
+        dn = ("NHWC", "HWIO", "NHWC")
+        for name in ("stage4/main_a", "encode", "head"):
+            w_q = paper_plan.layers[name].w_q
+            cin = w_q.shape[2]
+            ones = jnp.ones((1, 8, 8, cin), jnp.int8)
+            acc = quant.int8_conv_accumulate(ones, w_q, dn)
+            assert bool(quant.acc_range_ok(acc)), f"{name} overflows 16b"
+            bound = quant.conv_acc_worst_case(np.asarray(w_q))
+            assert int(jnp.abs(acc).max()) <= bound
+
+    def test_acc_range_ok_rejects_overflow(self):
+        assert not bool(quant.acc_range_ok(jnp.asarray([2**15], jnp.int32)))
+        assert bool(quant.acc_range_ok(jnp.asarray([2**15 - 1], jnp.int32)))
