@@ -1,0 +1,37 @@
+# Developer entry points. Everything runs with PYTHONPATH=src (the tier-1
+# contract in ROADMAP.md).
+PY ?= python
+PYTHONPATH := src
+
+.PHONY: test regen-goldens check-goldens bench-regression sharded-eval-sim
+
+# tier-1 suite
+test:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -x -q
+
+# Regenerate BOTH derived fixture sets together — the conformance golden
+# (tests/conformance/fixtures/) and the pinned synthetic-data checksums
+# (tests/fixtures/data_checksums.json). Run ONLY on an intentional
+# numerics/data change, then commit both. The golden-regen CI job runs
+# check-goldens and fails on any half-updated state.
+regen-goldens:
+	PYTHONPATH=$(PYTHONPATH) $(PY) scripts/regen_goldens.py
+
+check-goldens:
+	PYTHONPATH=$(PYTHONPATH) $(PY) scripts/regen_goldens.py --check
+
+# Compare fresh BENCH_*.json against baselines (default: the checked-in
+# copies snapshotted by CI before the benchmark run); fails on >20%
+# throughput regression. BASELINE_DIR must hold the baseline copies.
+BASELINE_DIR ?= .bench-baseline
+bench-regression:
+	$(PY) scripts/bench_regression.py --baseline-dir $(BASELINE_DIR)
+
+# The sharded-evaluation CI lane, runnable locally: 8 simulated CPU
+# devices, the shard-reduction tests, and the 4-shard vs single-host
+# bit-identical parity gate.
+sharded-eval-sim:
+	JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest tests/test_sharded_eval.py -q
+	JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.eval_map --fast --shards 4

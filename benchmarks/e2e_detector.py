@@ -32,6 +32,10 @@ from repro.models import snn_yolo as sy
 # the dense oracle is BIT-EXACT (tests/conformance/ enforces the same)
 PARITY_ATOL = 0.0
 EXECUTORS = ("dense", "gated", "pallas")
+# wall_s is the MEDIAN of this many timed calls: the dense forward at the
+# reduced scale runs in single-digit ms, where a one-shot sample is timer
+# noise — and the CI regression gate consumes this number
+N_TIMING_RUNS = 5
 
 
 def reduced_config() -> sy.SNNDetConfig:
@@ -90,10 +94,13 @@ def run(cfg: sy.SNNDetConfig | None = None, *, prune_rate: float = 0.8,
         plan = det.plan
         dets, head = det.detect(imgs)  # warm caches
         head.block_until_ready()
-        t0 = time.perf_counter()
-        dets, head = det.detect(imgs)
-        head.block_until_ready()
-        wall = time.perf_counter() - t0
+        walls = []
+        for _ in range(N_TIMING_RUNS):
+            t0 = time.perf_counter()
+            dets, head = det.detect(imgs)
+            head.block_until_ready()
+            walls.append(time.perf_counter() - t0)
+        wall = float(np.median(walls))
         heads[ex] = np.asarray(head)
         diff = float(np.abs(heads[ex] - heads["dense"]).max())
         sparse = ex != "dense"

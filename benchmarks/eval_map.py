@@ -10,7 +10,13 @@ hour on a 2-core CPU) the trained detector clears mAP@0.5 > 0.3 on
 the synthetic val split; ``--fast`` runs a minutes-scale smoke version
 whose numbers are NOT representative (expect mAP ≈ 0).
 
-  PYTHONPATH=src python -m benchmarks.eval_map [--fast]
+``--shards K`` routes every stage evaluation through the mesh-sharded
+path (``repro.eval.sharded``) and then re-scores the final weights
+single-host, FAILING the run unless the two reports are bit-identical —
+the acceptance gate the ``sharded-eval-sim`` CI lane runs under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+  PYTHONPATH=src python -m benchmarks.eval_map [--fast] [--shards 4]
 """
 from __future__ import annotations
 
@@ -19,18 +25,19 @@ import json
 
 
 def run(*, steps: int = 3500, finetune_steps: int = 600, batch: int = 6,
-        eval_images: int = 48, out_json: str = "BENCH_eval.json") -> dict:
+        eval_images: int = 48, shards: int = 1,
+        out_json: str = "BENCH_eval.json") -> dict:
     from repro.eval import harness
 
     report = harness.run_pipeline(
         steps=steps, finetune_steps=finetune_steps, batch=batch,
-        eval_images=eval_images, verbose=True,
+        eval_images=eval_images, eval_shards=shards, verbose=True,
     )
     s = report.summary()
     results = {
         "config": {
             "steps": steps, "finetune_steps": finetune_steps, "batch": batch,
-            "eval_images": eval_images,
+            "eval_images": eval_images, "eval_shards": shards,
         },
         **s,
         "stages": {
@@ -39,6 +46,34 @@ def run(*, steps: int = 3500, finetune_steps: int = 600, batch: int = 6,
         },
         "final_loss": {k: v[-1] for k, v in report.losses.items() if v},
     }
+    if shards > 1:
+        from repro.eval.sharded import reports_identical
+
+        # the acceptance gate: the sharded pipeline numbers above must be
+        # bit-identical to a single-host re-score of the same final weights
+        sharded_rep = report.stages["qat"]
+        single_rep = harness.evaluate_detector(
+            report.final_det, n_images=eval_images
+        )
+        identical = reports_identical(sharded_rep, single_rep)
+        results["sharded_parity"] = {
+            "n_shards": shards,
+            "gather": sharded_rep.get("gather"),
+            "map_sharded": sharded_rep["map"],
+            "map_single_host": single_rep["map"],
+            "bit_identical": identical,
+        }
+        print(f"  sharded parity [{shards} shards, "
+              f"{sharded_rep.get('gather')} gather]: "
+              f"mAP {sharded_rep['map']:.6f} vs single-host "
+              f"{single_rep['map']:.6f} — "
+              f"{'BIT-IDENTICAL' if identical else 'MISMATCH'}")
+        if not identical:
+            raise SystemExit(
+                f"sharded ({shards}-way) mAP is not bit-identical to the "
+                f"single-host evaluation: {sharded_rep['map']!r} vs "
+                f"{single_rep['map']!r}"
+            )
     if out_json:
         with open(out_json, "w") as f:
             json.dump(results, f, indent=1)
@@ -51,11 +86,15 @@ def main(argv=None):
     ap.add_argument("--fast", action="store_true",
                     help="smoke-scale (minutes; mAP not representative)")
     ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="evaluation shard count (mesh-sharded mAP; "
+                    "asserts bit-identical parity vs single-host)")
     args = ap.parse_args(argv)
     if args.fast:
-        run(steps=args.steps or 60, finetune_steps=20, batch=4, eval_images=8)
+        run(steps=args.steps or 60, finetune_steps=20, batch=4,
+            eval_images=8, shards=args.shards)
     else:
-        run(steps=args.steps or 3500)
+        run(steps=args.steps or 3500, shards=args.shards)
 
 
 if __name__ == "__main__":

@@ -33,6 +33,9 @@ def main(argv=None):
     ap.add_argument("--ckpt", default="/tmp/snn_det_ckpt")
     ap.add_argument("--eval-images", type=int, default=16,
                     help="val images for the post-training mAP report")
+    ap.add_argument("--eval-shards", type=int, default=1,
+                    help="shard the post-training mAP evaluation "
+                         "(repro.eval.sharded; bit-identical to 1 shard)")
     args = ap.parse_args(argv)
 
     # the harness's trainable-size config (96x160, thinner channels) so the
@@ -114,11 +117,14 @@ def main(argv=None):
         "pruned+quant": (cfg, q, state["bn"]),
     }.items():
         r = harness.evaluate_detector(
-            harness.compile_eval_detector(c, p, b), n_images=args.eval_images
+            harness.compile_eval_detector(c, p, b), n_images=args.eval_images,
+            sharded=args.eval_shards if args.eval_shards > 1 else None,
         )
         aps = ", ".join(f"{a:.3f}" for a in r["per_class_ap"])
+        shard_note = (f" [{r['n_shards']} shards, {r['gather']} gather]"
+                      if "n_shards" in r else "")
         print(f"mAP@0.5 [{tag}] {r['map']:.3f} (per-class {aps}) "
-              f"on {r['n_images']} val images")
+              f"on {r['n_images']} val images{shard_note}")
     if losses[-1] >= losses[0]:
         raise SystemExit("loss did not decrease")
     print("train_snn_detector OK")

@@ -1,0 +1,133 @@
+"""Benchmark-regression gate: fresh BENCH_*.json vs checked-in baselines.
+
+CI snapshots the checked-in BENCH files into a baseline dir BEFORE the
+benchmark jobs overwrite them, then runs this script, which prints a delta
+table for every throughput metric and exits 1 if any regresses by more
+than ``--threshold`` (default 20%).
+
+Throughput metrics per file (direction-normalized so a ratio < 1 is
+always "slower"):
+
+* ``BENCH_e2e.json``   — per-executor 1/wall_s
+* ``BENCH_serve.json`` — per-executor frames_per_s
+* ``BENCH_eval.json``  — 1/wall_s of the whole accuracy pipeline
+
+A file is only compared when its recorded ``config`` matches the
+baseline's — the checked-in BENCH_eval comes from the demonstration-scale
+run, while CI regenerates ``--fast``; comparing those walls would be
+noise, so mismatched configs are reported and skipped, never failed.
+
+    python scripts/bench_regression.py --baseline-dir .bench-baseline \
+        [--fresh-dir .] [--threshold 0.2] [--files BENCH_e2e.json ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_FILES = ("BENCH_e2e.json", "BENCH_serve.json", "BENCH_eval.json")
+
+
+def _throughputs(name: str, data: dict, min_seconds: float) -> tuple:
+    """Flatten one BENCH file to {metric: throughput} (higher = faster).
+    Wall-clock metrics shorter than ``min_seconds`` are noise-dominated
+    (a ms-scale sample swings far more than any threshold even on one
+    machine) and returned separately as skipped."""
+    out, skipped = {}, []
+    if name == "BENCH_e2e.json":
+        for ex, r in data.get("executors", {}).items():
+            if r.get("wall_s"):
+                if r["wall_s"] < min_seconds:
+                    skipped.append(f"{ex}.1/wall_s")
+                else:
+                    out[f"{ex}.1/wall_s"] = 1.0 / r["wall_s"]
+    elif name == "BENCH_serve.json":
+        for ex, r in data.get("executors", {}).items():
+            if "frames_per_s" in r:
+                out[f"{ex}.frames_per_s"] = r["frames_per_s"]
+    elif name == "BENCH_eval.json":
+        if data.get("wall_s"):
+            if data["wall_s"] < min_seconds:
+                skipped.append("pipeline.1/wall_s")
+            else:
+                out["pipeline.1/wall_s"] = 1.0 / data["wall_s"]
+    return out, skipped
+
+
+def compare(name: str, fresh: dict, base: dict, threshold: float,
+            min_seconds: float) -> tuple:
+    """(rows, skipped): rows of (metric, base_thpt, fresh_thpt, ratio,
+    regressed); skipped metric names (below the timing floor in either
+    run)."""
+    f, f_skip = _throughputs(name, fresh, min_seconds)
+    b, b_skip = _throughputs(name, base, min_seconds)
+    skipped = sorted(set(f_skip) | set(b_skip))
+    rows = []
+    for metric in sorted(set(f) & set(b) - set(skipped)):
+        ratio = f[metric] / b[metric]
+        rows.append((metric, b[metric], f[metric], ratio, ratio < 1 - threshold))
+    return rows, skipped
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", required=True,
+                    help="dir holding the pre-run (checked-in) BENCH copies")
+    ap.add_argument("--fresh-dir", default=".",
+                    help="dir holding the freshly-written BENCH files")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="max tolerated fractional throughput drop")
+    ap.add_argument("--min-seconds", type=float, default=0.01,
+                    help="skip wall-clock metrics shorter than this "
+                    "(single-digit-ms samples are timer noise)")
+    ap.add_argument("--files", nargs="*", default=list(DEFAULT_FILES))
+    args = ap.parse_args(argv)
+
+    failed = []
+    compared_any = False
+    for name in args.files:
+        fresh_p = os.path.join(args.fresh_dir, name)
+        base_p = os.path.join(args.baseline_dir, name)
+        if not os.path.exists(fresh_p) or not os.path.exists(base_p):
+            print(f"{name}: skipped (missing "
+                  f"{'fresh' if not os.path.exists(fresh_p) else 'baseline'})")
+            continue
+        with open(fresh_p) as f:
+            fresh = json.load(f)
+        with open(base_p) as f:
+            base = json.load(f)
+        if fresh.get("config") != base.get("config"):
+            print(f"{name}: skipped (config mismatch — fresh "
+                  f"{fresh.get('config')} vs baseline {base.get('config')})")
+            continue
+        rows, skipped = compare(name, fresh, base, args.threshold,
+                                args.min_seconds)
+        if not rows and not skipped:
+            print(f"{name}: no comparable throughput metrics")
+            continue
+        print(f"\n{name} (threshold −{args.threshold:.0%}):")
+        print(f"  {'metric':28s} {'baseline':>12s} {'fresh':>12s} "
+              f"{'ratio':>7s}")
+        for metric, bv, fv, ratio, bad in rows:
+            compared_any = True
+            flag = "  REGRESSED" if bad else ""
+            print(f"  {metric:28s} {bv:12.4g} {fv:12.4g} {ratio:6.2f}x{flag}")
+            if bad:
+                failed.append(f"{name}:{metric} ({ratio:.2f}x)")
+        for metric in skipped:
+            print(f"  {metric:28s} skipped (wall < {args.min_seconds}s: "
+                  "below timing resolution)")
+    print()
+    if failed:
+        print(f"throughput regression > {args.threshold:.0%}: "
+              + ", ".join(failed))
+        return 1
+    print("bench regression gate: "
+          + ("OK" if compared_any else "nothing comparable (all skipped)"))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

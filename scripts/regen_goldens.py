@@ -1,0 +1,144 @@
+"""Regenerate EVERY derived fixture in one step — or verify them (--check).
+
+The two fixture sets that must move together on any intentional numerics
+change (and historically didn't):
+
+* ``tests/conformance/fixtures/golden_conformance.npz`` — the dense-oracle
+  conformance golden (``tests/conformance/make_golden.py`` semantics),
+* ``tests/fixtures/data_checksums.json`` — the pinned crc32 checksums of
+  the synthetic dataset samples that ``tests/test_data.py`` asserts.
+
+``make regen-goldens`` runs this in write mode; the ``golden-regen`` CI job
+runs ``--check``, which regenerates everything in memory and fails on ANY
+divergence from the checked-in copies — so a PR that changes the data
+stream or detector numerics without re-pinning both fixture sets cannot
+land half-updated. (``--check`` compares array/JSON CONTENT, not file
+bytes: npz zip members carry timestamps, so byte equality would be flaky.)
+
+    PYTHONPATH=src python scripts/regen_goldens.py [--check]
+
+After an intentional regen, also rerun the full ``benchmarks/eval_map.py``
+if the data distribution changed — BENCH_eval.json numbers pin to it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import zlib
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, os.path.join(REPO, "tests", "conformance"))
+
+CHECKSUMS_PATH = os.path.join(REPO, "tests", "fixtures", "data_checksums.json")
+# the sample grid tests/test_data.py pins: (96, 160) @ grid_div 16 — the
+# harness demo scale every checked-in accuracy number is generated at
+DATA_HW, DATA_GRID_DIV = (96, 160), 16
+DATA_SAMPLES = (("train", 0), ("train", 123), ("val", 0), ("val", 31))
+
+
+def build_checksums() -> dict:
+    from repro.data import synthetic_detection as sd
+
+    samples = []
+    for split, idx in DATA_SAMPLES:
+        img, tgt, _ = sd.sample(idx, split=split, hw=DATA_HW,
+                                grid_div=DATA_GRID_DIV)
+        samples.append({
+            "split": split,
+            "index": idx,
+            "image_crc32": zlib.crc32(np.ascontiguousarray(img).tobytes()),
+            "target_crc32": zlib.crc32(np.ascontiguousarray(tgt).tobytes()),
+        })
+    return {"hw": list(DATA_HW), "grid_div": DATA_GRID_DIV, "samples": samples}
+
+
+def build_conformance() -> dict:
+    import golden
+
+    # the ONE generation recipe, shared with tests/conformance/make_golden.py
+    return golden.build_reference()
+
+
+def _diff_conformance(fresh: dict) -> list:
+    import golden
+
+    if not os.path.exists(golden.FIXTURE):
+        return [f"missing fixture {golden.FIXTURE}"]
+    disk = golden.load_golden()
+    problems = []
+    for k in sorted(set(fresh) | set(disk)):
+        if k not in disk:
+            problems.append(f"conformance: {k} missing from checked-in npz")
+        elif k not in fresh:
+            problems.append(f"conformance: stale array {k} in checked-in npz")
+        elif not np.array_equal(fresh[k], disk[k], equal_nan=True):
+            problems.append(f"conformance: {k} differs from checked-in npz")
+    return problems
+
+
+def _diff_checksums(fresh: dict) -> list:
+    if not os.path.exists(CHECKSUMS_PATH):
+        return [f"missing {CHECKSUMS_PATH}"]
+    with open(CHECKSUMS_PATH) as f:
+        disk = json.load(f)
+    if fresh != disk:
+        return [f"data checksums differ from {CHECKSUMS_PATH} — the "
+                "synthetic data stream changed"]
+    return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="regenerate in memory and fail on any divergence "
+                    "from the checked-in fixtures (no files written)")
+    args = ap.parse_args(argv)
+
+    import golden
+
+    checks = build_checksums()
+    conf = build_conformance()
+
+    if args.check:
+        problems = _diff_checksums(checks) + _diff_conformance(conf)
+        if problems:
+            for p in problems:
+                print(f"STALE: {p}")
+            print("\nfixtures are out of sync with the code — if the "
+                  "numerics change is intentional, run `make regen-goldens` "
+                  "and commit BOTH fixture sets")
+            return 1
+        print(f"fixtures up to date: {len(conf)} conformance arrays, "
+              f"{len(checks['samples'])} data checksums")
+        return 0
+
+    # only touch files whose CONTENT changed — rewriting an identical npz
+    # would still churn git (zip members carry timestamps)
+    if _diff_checksums(checks):
+        os.makedirs(os.path.dirname(CHECKSUMS_PATH), exist_ok=True)
+        with open(CHECKSUMS_PATH, "w") as f:
+            json.dump(checks, f, indent=1)
+            f.write("\n")
+        print(f"wrote {CHECKSUMS_PATH} ({len(checks['samples'])} samples)")
+    else:
+        print(f"unchanged: {CHECKSUMS_PATH}")
+    if _diff_conformance(conf):
+        os.makedirs(os.path.dirname(golden.FIXTURE), exist_ok=True)
+        np.savez_compressed(golden.FIXTURE, **conf)
+        print(f"wrote {golden.FIXTURE} "
+              f"({os.path.getsize(golden.FIXTURE) / 1024:.1f} KiB, "
+              f"{len(conf)} arrays)")
+    else:
+        print(f"unchanged: {golden.FIXTURE}")
+    print("reminder: if the DATA stream changed, the checked-in "
+          "BENCH_eval.json numbers are stale too (full eval_map rerun)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

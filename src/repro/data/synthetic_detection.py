@@ -145,17 +145,35 @@ def batches(
         step += 1
 
 
-def eval_set(n_images: int, *, split: str = "val", hw=(576, 1024), **kw):
+def eval_shard_indices(n_images: int, shard_id: int = 0, n_shards: int = 1) -> list:
+    """Global sample indices owned by one evaluation shard, under the SAME
+    striping contract as :func:`batches` host striping: shard s of k owns
+    indices s, s+k, s+2k, ... — disjoint across shards, union = range(n).
+    A shard can be empty when n_shards > n_images."""
+    if not 0 <= shard_id < n_shards:
+        raise ValueError(f"shard_id {shard_id} out of range for {n_shards} shards")
+    return list(range(shard_id, n_images, n_shards))
+
+
+def eval_set(n_images: int, *, split: str = "val", hw=(576, 1024),
+             shard_id: int = 0, n_shards: int = 1, **kw):
     """Fixed evaluation split for the mAP harness: returns
     (images (N,H,W,3), ground_truths) where ground_truths[i] is the
     {"boxes" (G,4) xywh-normalized, "classes" (G,)} dict
-    ``repro.eval.detection_map`` consumes."""
+    ``repro.eval.detection_map`` consumes.
+
+    ``shard_id``/``n_shards`` stripe the GLOBAL ``n_images`` split the way
+    :func:`batches` stripes training data: this shard materializes only the
+    samples of :func:`eval_shard_indices` (possibly none), so a mesh of k
+    hosts generates k disjoint shards whose union is the single-host set."""
     imgs, gts = [], []
-    for i in range(n_images):
+    for i in eval_shard_indices(n_images, shard_id, n_shards):
         img, _, (boxes, classes) = sample(i, split=split, hw=hw, **kw)
         imgs.append(img)
         gts.append({
             "boxes": np.asarray(boxes, np.float32).reshape(-1, 4),
             "classes": np.asarray(classes, np.int64).reshape(-1),
         })
-    return np.stack(imgs), gts
+    h, w = hw
+    images = np.stack(imgs) if imgs else np.zeros((0, h, w, 3), np.float32)
+    return images, gts

@@ -94,6 +94,40 @@ def hierarchical_psum(mesh: Mesh):
     return shard_map(inner, mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False)
 
 
+# ------------------------------------------------- eval-stat all-gather --
+
+
+def eval_stats_allgather(mesh: Mesh, axis_name: str = "data"):
+    """The sharded-mAP reduction: every shard holds one padded row of
+    per-prediction match statistics (global image index, class, score, TP
+    flag, valid mask — any dict of equal-leading-dim arrays) plus its local
+    per-class ground-truth counts. Returns ``f(rows, counts) ->
+    (gathered_rows, total_counts)`` where ``rows`` leaves are (k, cap)
+    arrays sharded over ``axis_name`` (one shard per device), gathered back
+    replicated, and ``counts`` is (k, C) sharded the same way and
+    all-reduced with an exact integer psum.
+
+    This is the collective `repro.eval.sharded` pools through before the AP
+    sweep: all_gather moves the (score, TP) lists, psum moves the recall
+    denominators — both exact (int / bit-preserved payloads), so the pooled
+    PR curve is bit-identical to the single-host evaluation."""
+
+    def inner(rows, counts):
+        g = jax.tree_util.tree_map(
+            lambda r: jax.lax.all_gather(r, axis_name, axis=0, tiled=True), rows
+        )
+        total = jax.lax.psum(counts, axis_name)[0]
+        return g, total
+
+    return shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+
 # ------------------------------------------- all-gather/matmul overlapping --
 
 

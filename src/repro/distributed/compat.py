@@ -10,6 +10,7 @@ from __future__ import annotations
 import inspect
 
 import jax
+import numpy as np
 
 try:
     from jax import shard_map as _shard_map
@@ -39,3 +40,19 @@ def make_mesh(shape, axes):
     if axis_type is not None:
         return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
     return jax.make_mesh(shape, axes)
+
+
+def local_device_mesh(n: int, axis_name: str = "data"):
+    """A 1-D mesh over the FIRST ``n`` local devices. ``jax.make_mesh``
+    insists on consuming every device; evaluation sharding wants a subset
+    (e.g. 4 eval shards under ``--xla_force_host_platform_device_count=8``),
+    so this builds the Mesh directly — the plain constructor defaults to
+    Auto axis types on every supported jax."""
+    devs = jax.devices()
+    if n > len(devs):
+        raise ValueError(
+            f"need {n} devices for a {n}-way mesh but only {len(devs)} are "
+            "visible — lower n_shards or force more simulated devices "
+            "(XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+        )
+    return jax.sharding.Mesh(np.asarray(devs[:n]), (axis_name,))

@@ -1,6 +1,11 @@
 """Accuracy evaluation for the SNN detector: VOC-style mAP plus the
 train→prune→QAT→evaluate harness reproducing the paper's Table I /
 Fig 15 accuracy story at demo scale."""
-from repro.eval import detection_map, harness  # noqa: F401
+from repro.eval import detection_map, harness, sharded  # noqa: F401
 from repro.eval.detection_map import evaluate_detections, map50  # noqa: F401
 from repro.eval.harness import EvalReport, evaluate_detector, run_pipeline  # noqa: F401
+from repro.eval.sharded import (  # noqa: F401
+    ShardedEvalConfig,
+    evaluate_detector_sharded,
+    evaluate_predictions_sharded,
+)

@@ -147,49 +147,32 @@ def evaluate_detections(
 
     ``predictions``: per image, a dict {boxes (P,4), scores (P,),
     classes (P,)} or a single-image Detections. ``ground_truths``: per
-    image, a dict {boxes (G,4), classes (G,)}. Images align by position.
+    image, a dict {boxes (G,4), classes (G,)}. Images align by position
+    (a mismatched pairing raises — silent truncation would shrink the
+    recall denominator and INFLATE mAP instead of surfacing the bug).
 
     Returns {"map": float, "per_class_ap": (C,) list (NaN = class absent),
     "n_gt": (C,) list, "n_pred": (C,) list, "iou_threshold": float}.
+
+    This IS the one-shard case of the mesh-sharded evaluator: per-image
+    matching and AP pooling live in ``repro.eval.sharded`` (match_stats /
+    pool_stats), so the sharded path cannot drift from this one — they are
+    the same code.
     """
-    pooled_scores: list[list] = [[] for _ in range(num_classes)]
-    pooled_tp: list[list] = [[] for _ in range(num_classes)]
-    n_gt = np.zeros(num_classes, np.int64)
-    n_images = 0
-    # strict: a silently truncated pairing would shrink the recall
-    # denominator and INFLATE mAP instead of surfacing the caller's bug
-    for pred, gt in zip(predictions, ground_truths, strict=True):
-        n_images += 1
-        pred = _as_image_preds(pred)
-        p_boxes = np.asarray(pred["boxes"], np.float64).reshape(-1, 4)
-        p_scores = np.asarray(pred["scores"], np.float64).reshape(-1)
-        p_cls = np.asarray(pred["classes"], np.int64).reshape(-1)
-        g_boxes = np.asarray(gt["boxes"], np.float64).reshape(-1, 4)
-        g_cls = np.asarray(gt["classes"], np.int64).reshape(-1)
-        for c in range(num_classes):
-            n_gt[c] += int(np.sum(g_cls == c))
-            sel = p_cls == c
-            if not np.any(sel):
-                continue
-            tp = match_image(
-                p_boxes[sel], p_scores[sel], g_boxes[g_cls == c],
-                iou_threshold=iou_threshold,
-            )
-            pooled_scores[c].extend(p_scores[sel].tolist())
-            pooled_tp[c].extend(tp.tolist())
-    aps = [
-        average_precision(np.asarray(pooled_scores[c]), np.asarray(pooled_tp[c]), int(n_gt[c]))
-        for c in range(num_classes)
-    ]
-    present = [a for a in aps if not np.isnan(a)]
-    return {
-        "map": float(np.mean(present)) if present else float("nan"),
-        "per_class_ap": aps,
-        "n_gt": n_gt.tolist(),
-        "n_pred": [len(s) for s in pooled_scores],
-        "n_images": n_images,
-        "iou_threshold": float(iou_threshold),
-    }
+    from repro.eval import sharded as se  # lazy: sharded imports this module
+
+    preds = list(predictions)
+    gts = list(ground_truths)
+    stats = se.match_stats(
+        preds, gts, range(len(preds)),
+        num_classes=num_classes, iou_threshold=iou_threshold,
+    )
+    report = se.pool_stats(
+        [stats], num_classes=num_classes, iou_threshold=iou_threshold
+    )
+    # single-host surface: no sharding metadata in the report
+    del report["n_shards"], report["gather"]
+    return report
 
 
 def map50(

@@ -100,6 +100,7 @@ def evaluate_detector(
     split: str = "val",
     batch: int = 8,
     iou_threshold: float = 0.5,
+    sharded=None,
 ) -> dict:
     """mAP@iou of a :class:`~repro.serve.detector.CompiledDetector` on the
     synthetic eval split (ground truth from ``synthetic_detection.sample``).
@@ -107,7 +108,24 @@ def evaluate_detector(
     The handle's own postprocess settings are respected — build the
     detector with :func:`compile_eval_detector` (low threshold, deep
     budget) unless you specifically want serving-threshold mAP.
+
+    ``sharded``: a :class:`repro.eval.sharded.ShardedEvalConfig` (or a bare
+    shard count) routes the evaluation through the mesh-sharded path —
+    striped split, per-shard forward→decode→NMS, collective reduction of
+    the pooled match stats. The result is bit-identical to this single-host
+    path for any shard count (tests/test_sharded_eval.py).
     """
+    if sharded is not None:
+        from repro.eval import sharded as se
+
+        eval_cfg = (
+            se.ShardedEvalConfig(n_shards=sharded, batch=batch)
+            if isinstance(sharded, int) else sharded
+        )
+        return se.evaluate_detector_sharded(
+            det, n_images=n_images, split=split, iou_threshold=iou_threshold,
+            eval_cfg=eval_cfg,
+        )
     cfg = det.cfg
     images, gts = sd.eval_set(
         n_images, split=split, hw=cfg.input_hw, grid_div=grid_div(cfg),
@@ -209,6 +227,10 @@ class EvalReport:
     accumulator: dict
     losses: dict  # stage -> loss curve
     wall_s: float
+    # the final (qat-stage) compile_eval_detector handle, kept so callers
+    # (benchmarks/eval_map.py sharded-parity check) can re-score the SAME
+    # weights under a different shard count without retraining
+    final_det: Optional[object] = None
 
     @property
     def map_by_stage(self) -> dict:
@@ -241,6 +263,7 @@ def run_pipeline(
     prune_rate: float = 0.8,
     seed: int = 0,
     conv_exec: str = "dense",
+    eval_shards: int = 1,
     verbose: bool = True,
 ) -> EvalReport:
     """The scaled-down Table I / Fig 15 reproduction.
@@ -254,6 +277,10 @@ def run_pipeline(
     border semantics. A compressed conv_exec therefore requires a
     block-conv config, so per-stage deltas measure compression, never a
     border-semantics mismatch against the float stages.
+
+    ``eval_shards > 1`` routes every stage evaluation through the
+    mesh-sharded path (``repro.eval.sharded``); the reduction is exact, so
+    the reported numbers are bit-identical to the single-host run.
     """
     t0 = time.time()
     base = cfg if cfg is not None else demo_config()
@@ -270,10 +297,12 @@ def run_pipeline(
     quant_cfg = dataclasses.replace(base, weight_bits=8, conv_exec=conv_exec)
     stages: dict = {}
     losses: dict = {}
+    sharded_cfg = eval_shards if eval_shards > 1 else None
 
     def _eval(tag, c, p, b):
         det = compile_eval_detector(c, p, b)
-        stages[tag] = evaluate_detector(det, n_images=eval_images)
+        stages[tag] = evaluate_detector(det, n_images=eval_images,
+                                        sharded=sharded_cfg)
         if verbose:
             aps = ", ".join(f"{a:.3f}" for a in stages[tag]["per_class_ap"])
             print(f"  [{tag}] mAP@0.5 {stages[tag]['map']:.3f}  (per-class {aps})")
@@ -310,6 +339,7 @@ def run_pipeline(
                 dataclasses.replace(quant_cfg, mixed_time=False), qp, qbn
             ),
             n_images=eval_images,
+            sharded=sharded_cfg,
         ),
     }
     report = EvalReport(
@@ -318,6 +348,7 @@ def run_pipeline(
         accumulator=accumulator_report(det),
         losses=losses,
         wall_s=time.time() - t0,
+        final_det=det,
     )
     if verbose:
         s = report.summary()

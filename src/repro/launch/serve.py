@@ -88,11 +88,25 @@ def _serve_detector(cfg, args):
         from repro.eval import detection_map as dm
 
         preds = [r.out[0] for r in sorted(done, key=lambda r: r.rid)]
-        rep = dm.evaluate_detections(
-            preds, gts, num_classes=cfg.num_classes, iou_threshold=0.5
-        )
+        if args.eval_shards > 1:
+            # score the served detections through the mesh-sharded reduction
+            # (striped match stats, collective gather) — bit-identical to
+            # the single-host sweep below for any shard count
+            from repro.eval import sharded as se
+
+            rep = se.evaluate_predictions_sharded(
+                preds, gts, num_classes=cfg.num_classes, iou_threshold=0.5,
+                eval_cfg=se.ShardedEvalConfig(n_shards=args.eval_shards),
+            )
+            shard_note = f" ({rep['n_shards']} shards, {rep['gather']} gather)"
+        else:
+            rep = dm.evaluate_detections(
+                preds, gts, num_classes=cfg.num_classes, iou_threshold=0.5
+            )
+            shard_note = ""
         print(f"  served-detections mAP@0.5 {rep['map']:.3f} over "
-              f"{rep['n_images']} val frames at the serving score threshold "
+              f"{rep['n_images']} val frames{shard_note} at the serving "
+              f"score threshold "
               f"({det.score_threshold}) — demo weights are random-calibrated; "
               "load a trained checkpoint for representative accuracy")
 
@@ -112,6 +126,9 @@ def main(argv=None):
     ap.add_argument("--eval-map", action="store_true",
                     help="serve the synthetic val split and report mAP@0.5 "
                          "of the SERVED detections (snn-det only)")
+    ap.add_argument("--eval-shards", type=int, default=1,
+                    help="score the served detections through the "
+                         "mesh-sharded mAP reduction (with --eval-map)")
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args(argv)
 

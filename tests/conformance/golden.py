@@ -81,6 +81,17 @@ def run_executor(executor: str, params, bn, frames, cfg=None) -> dict:
     return out
 
 
+def build_reference() -> dict:
+    """The full fixture payload: dense-oracle outputs + the input frames.
+    THE one recipe — ``make_golden.py`` (write) and
+    ``scripts/regen_goldens.py`` (write + --check) both call this, so the
+    two entry points can never drift apart."""
+    params, bn, frames = build_inputs()
+    ref = run_executor("dense", params, bn, frames)
+    ref["frames"] = np.asarray(frames)
+    return ref
+
+
 def load_golden() -> dict:
     with np.load(FIXTURE) as z:
         return {k: z[k] for k in z.files}

@@ -18,9 +18,7 @@ import golden  # noqa: E402
 
 
 def main():
-    params, bn, frames = golden.build_inputs()
-    ref = golden.run_executor("dense", params, bn, frames)
-    ref["frames"] = np.asarray(frames)
+    ref = golden.build_reference()
     os.makedirs(os.path.dirname(golden.FIXTURE), exist_ok=True)
     np.savez_compressed(golden.FIXTURE, **ref)
     size = os.path.getsize(golden.FIXTURE)
