@@ -16,7 +16,14 @@ single-host, FAILING the run unless the two reports are bit-identical —
 the acceptance gate the ``sharded-eval-sim`` CI lane runs under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
+``--dataset coco:<json>|voc:<dir>`` swaps the synthetic split for real
+annotated frames (``repro.data.detection_datasets``); ``--ckpt-dir``
+commits detector checkpoints after the train and QAT stages for
+``launch/serve.py --checkpoint`` to restore.
+
   PYTHONPATH=src python -m benchmarks.eval_map [--fast] [--shards 4]
+      [--dataset coco:tests/fixtures/coco_fixture/instances.json]
+      [--ckpt-dir /tmp/snn_det_ckpt] [--out-json BENCH_eval.json]
 """
 from __future__ import annotations
 
@@ -25,19 +32,23 @@ import json
 
 
 def run(*, steps: int = 3500, finetune_steps: int = 600, batch: int = 6,
-        eval_images: int = 48, shards: int = 1,
-        out_json: str = "BENCH_eval.json") -> dict:
+        eval_images: int = 48, shards: int = 1, dataset: str = "synthetic",
+        ckpt_dir: str = None, out_json: str = "BENCH_eval.json") -> dict:
+    from repro.data import detection_datasets as dd
     from repro.eval import harness
 
+    source = dd.parse_dataset_spec(dataset)
     report = harness.run_pipeline(
         steps=steps, finetune_steps=finetune_steps, batch=batch,
-        eval_images=eval_images, eval_shards=shards, verbose=True,
+        eval_images=eval_images, eval_shards=shards, source=source,
+        ckpt_dir=ckpt_dir, verbose=True,
     )
     s = report.summary()
     results = {
         "config": {
             "steps": steps, "finetune_steps": finetune_steps, "batch": batch,
             "eval_images": eval_images, "eval_shards": shards,
+            "dataset": dataset, "ckpt_dir": ckpt_dir,
         },
         **s,
         "stages": {
@@ -53,7 +64,7 @@ def run(*, steps: int = 3500, finetune_steps: int = 600, batch: int = 6,
         # bit-identical to a single-host re-score of the same final weights
         sharded_rep = report.stages["qat"]
         single_rep = harness.evaluate_detector(
-            report.final_det, n_images=eval_images
+            report.final_det, n_images=eval_images, source=source
         )
         identical = reports_identical(sharded_rep, single_rep)
         results["sharded_parity"] = {
@@ -89,12 +100,24 @@ def main(argv=None):
     ap.add_argument("--shards", type=int, default=1,
                     help="evaluation shard count (mesh-sharded mAP; "
                     "asserts bit-identical parity vs single-host)")
+    ap.add_argument("--dataset", default="synthetic",
+                    help="train/eval data: synthetic | coco:<instances."
+                         "json> | voc:<dir> (repro.data.detection_datasets)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="commit detector checkpoints (post-train and "
+                         "post-QAT) here; launch/serve.py --checkpoint "
+                         "restores them")
+    ap.add_argument("--out-json", default="BENCH_eval.json",
+                    help="result file ('' skips writing — CI smoke runs "
+                         "that must not clobber the checked-in numbers)")
     args = ap.parse_args(argv)
+    kw = dict(shards=args.shards, dataset=args.dataset,
+              ckpt_dir=args.ckpt_dir, out_json=args.out_json)
     if args.fast:
         run(steps=args.steps or 60, finetune_steps=20, batch=4,
-            eval_images=8, shards=args.shards)
+            eval_images=8, **kw)
     else:
-        run(steps=args.steps or 3500, shards=args.shards)
+        run(steps=args.steps or 3500, **kw)
 
 
 if __name__ == "__main__":

@@ -6,6 +6,10 @@ pruning + quantization (the SNN-a -> SNN-d pipeline of Table I).
 
 Reduced size for CPU (96x160 input, thinner channels); a few hundred steps.
 Usage:  PYTHONPATH=src python examples/train_snn_detector.py [--steps 300]
+            [--dataset coco:<instances.json>|voc:<dir>]
+Real annotated frames swap in via --dataset (letterboxed to the input
+resolution); the final SNN-d weights are committed as a detector
+checkpoint that launch/serve.py --checkpoint restores.
 """
 from __future__ import annotations
 
@@ -15,10 +19,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import pruning, quant
-from repro.data import synthetic_detection as sd
+from repro.data import detection_datasets as dd
 from repro.eval import harness
 from repro.models import snn_yolo as sy
 from repro.train import checkpoint as ckpt
@@ -31,12 +34,16 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--ckpt", default="/tmp/snn_det_ckpt")
+    ap.add_argument("--dataset", default="synthetic",
+                    help="train/eval data: synthetic | coco:<instances."
+                         "json> | voc:<dir> (repro.data.detection_datasets)")
     ap.add_argument("--eval-images", type=int, default=16,
                     help="val images for the post-training mAP report")
     ap.add_argument("--eval-shards", type=int, default=1,
                     help="shard the post-training mAP evaluation "
                          "(repro.eval.sharded; bit-identical to 1 shard)")
     args = ap.parse_args(argv)
+    source = dd.parse_dataset_spec(args.dataset)
 
     # the harness's trainable-size config (96x160, thinner channels) so the
     # reported mAP is comparable with BENCH_eval.json
@@ -69,7 +76,8 @@ def main(argv=None):
 
     # reduced config downsamples /16 (stem + conv + 2 stage pools), not /32
     grid_div = harness.grid_div(cfg)
-    stream = sd.batches(args.batch, hw=cfg.input_hw, steps=args.steps, grid_div=grid_div)
+    stream = source.batches(args.batch, hw=cfg.input_hw, steps=args.steps,
+                            grid_div=grid_div)
     losses = []
 
     def step_fn(state, step):
@@ -98,8 +106,8 @@ def main(argv=None):
         lambda x: quant.fake_quant_tensor(x, bits=8) if x.ndim == 4 else x, pruned
     )
     det = sy.compile_detector(cfg, q, state["bn"])
-    imgs = jnp.asarray(next(sd.batches(2, hw=cfg.input_hw, steps=1,
-                                       grid_div=grid_div))["image"])
+    imgs = jnp.asarray(next(source.batches(2, hw=cfg.input_hw, steps=1,
+                                           grid_div=grid_div))["image"])
     dets, head = det.detect(imgs)
     print(f"pruned: kept {rep['kept_frac']*100:.1f}% of {rep['total_params']/1e3:.0f}k "
           f"params (paper SNN-b: 30%)")
@@ -119,12 +127,23 @@ def main(argv=None):
         r = harness.evaluate_detector(
             harness.compile_eval_detector(c, p, b), n_images=args.eval_images,
             sharded=args.eval_shards if args.eval_shards > 1 else None,
+            source=source,
         )
         aps = ", ".join(f"{a:.3f}" for a in r["per_class_ap"])
         shard_note = (f" [{r['n_shards']} shards, {r['gather']} gather]"
                       if "n_shards" in r else "")
         print(f"mAP@0.5 [{tag}] {r['map']:.3f} (per-class {aps}) "
               f"on {r['n_images']} val images{shard_note}")
+
+    # commit the SNN-d weights as a self-describing detector checkpoint —
+    # `launch/serve.py --arch snn-det --checkpoint <dir>` restores it
+    det_ckpt = args.ckpt + "/detector"
+    harness.save_detector_checkpoint(det_ckpt, args.steps, q, state["bn"], cfg)
+    print(f"detector checkpoint committed to {det_ckpt} — serve it with:\n"
+          f"  PYTHONPATH=src python -m repro.launch.serve --arch snn-det "
+          f"--eval-map --checkpoint {det_ckpt}")
+    # surfaces any failed async checkpoint write before we declare success
+    ckpt.wait_pending()
     if losses[-1] >= losses[0]:
         raise SystemExit("loss did not decrease")
     print("train_snn_detector OK")

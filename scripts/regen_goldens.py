@@ -39,9 +39,17 @@ CHECKSUMS_PATH = os.path.join(REPO, "tests", "fixtures", "data_checksums.json")
 # harness demo scale every checked-in accuracy number is generated at
 DATA_HW, DATA_GRID_DIV = (96, 160), 16
 DATA_SAMPLES = (("train", 0), ("train", 123), ("val", 0), ("val", 31))
+# the committed real-data fixture: letterboxed images + grid targets from
+# the COCO-json loader are pinned at the same demo scale
+COCO_FIXTURE = os.path.join("tests", "fixtures", "coco_fixture", "instances.json")
+
+
+def _crc(arr) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
 def build_checksums() -> dict:
+    from repro.data import detection_datasets as dd
     from repro.data import synthetic_detection as sd
 
     samples = []
@@ -51,10 +59,29 @@ def build_checksums() -> dict:
         samples.append({
             "split": split,
             "index": idx,
-            "image_crc32": zlib.crc32(np.ascontiguousarray(img).tobytes()),
-            "target_crc32": zlib.crc32(np.ascontiguousarray(tgt).tobytes()),
+            "image_crc32": _crc(img),
+            "target_crc32": _crc(tgt),
         })
-    return {"hw": list(DATA_HW), "grid_div": DATA_GRID_DIV, "samples": samples}
+    src = dd.CocoJsonSource(os.path.join(REPO, COCO_FIXTURE))
+    n = src.num_eval_images("val")
+    images, gts = src.eval_set(n, hw=DATA_HW, grid_div=DATA_GRID_DIV)
+    batch = next(src.batches(n, hw=DATA_HW, steps=1, grid_div=DATA_GRID_DIV))
+    coco = [
+        {
+            "index": i,
+            "image_crc32": _crc(images[i]),
+            "target_crc32": _crc(batch["target"][i]),
+            "boxes_crc32": _crc(gts[i]["boxes"]),
+            "classes": gts[i]["classes"].tolist(),
+        }
+        for i in range(n)
+    ]
+    return {
+        "hw": list(DATA_HW), "grid_div": DATA_GRID_DIV, "samples": samples,
+        "coco_fixture": {"json": COCO_FIXTURE.replace(os.sep, "/"),
+                         "class_names": list(src.class_names),
+                         "samples": coco},
+    }
 
 
 def build_conformance() -> dict:

@@ -1,1 +1,8 @@
-from repro.data import lm_data, synthetic_detection  # noqa: F401
+from repro.data import detection_datasets, lm_data, synthetic_detection  # noqa: F401
+from repro.data.detection_datasets import (  # noqa: F401
+    CocoJsonSource,
+    DetectionSource,
+    SyntheticSource,
+    VocXmlSource,
+    parse_dataset_spec,
+)

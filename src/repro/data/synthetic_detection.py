@@ -58,6 +58,27 @@ def _best_anchor(bw_cells: float, bh_cells: float, anchors) -> int:
     return best
 
 
+def encode_targets(boxes, classes, *, gh: int, gw: int, num_anchors: int = 5,
+                   num_classes: int = 3, anchors=ANCHORS) -> np.ndarray:
+    """YOLOv2 grid targets from normalized (cx, cy, w, h) boxes — the exact
+    inverse of ``snn_yolo.decode_head`` (best-shape-IoU anchor, within-cell
+    tx/ty offsets, log-scale tw/th vs that anchor). Shared by the synthetic
+    generator and the real-data loaders (``repro.data.detection_datasets``)
+    so every source supervises the head identically."""
+    tgt = np.zeros((gh, gw, num_anchors, 5 + num_classes), np.float32)
+    for (cx, cy, bw, bh), c in zip(boxes, classes):
+        gx, gy = min(int(cx * gw), gw - 1), min(int(cy * gh), gh - 1)
+        a = _best_anchor(bw * gw, bh * gh, anchors[:num_anchors])
+        aw, ah = anchors[a]
+        tgt[gy, gx, a, 0:4] = (
+            cx * gw - gx, cy * gh - gy,
+            np.log(max(bw * gw / aw, 1e-6)), np.log(max(bh * gh / ah, 1e-6)),
+        )
+        tgt[gy, gx, a, 4] = 1.0
+        tgt[gy, gx, a, 5 + int(c)] = 1.0
+    return tgt
+
+
 def _render_image(rng, hw, boxes, classes):
     h, w = hw
     sky = np.linspace(0.65, 0.25, h, dtype=np.float32)[:, None, None]
@@ -99,20 +120,8 @@ def sample(index: int, *, split: str = "train", hw=(576, 1024), num_classes: int
     img = _render_image(rng, hw, boxes, classes)
 
     gh, gw = hw[0] // grid_div, hw[1] // grid_div
-    tgt = np.zeros((gh, gw, num_anchors, 5 + num_classes), np.float32)
-    for (cx, cy, bw, bh), c in zip(boxes, classes):
-        gx, gy = min(int(cx * gw), gw - 1), min(int(cy * gh), gh - 1)
-        # anchor by shape IoU, tw/th log-scale vs that anchor — the exact
-        # inverse of decode_head (bw = aw * exp(tw) / gw), so decode(head)
-        # reproduces the ground truth when the head fits the targets
-        a = _best_anchor(bw * gw, bh * gh, anchors[:num_anchors])
-        aw, ah = anchors[a]
-        tgt[gy, gx, a, 0:4] = (
-            cx * gw - gx, cy * gh - gy,
-            np.log(max(bw * gw / aw, 1e-6)), np.log(max(bh * gh / ah, 1e-6)),
-        )
-        tgt[gy, gx, a, 4] = 1.0
-        tgt[gy, gx, a, 5 + int(c)] = 1.0
+    tgt = encode_targets(boxes, classes, gh=gh, gw=gw, num_anchors=num_anchors,
+                         num_classes=num_classes, anchors=anchors)
     return img, tgt, (boxes, classes)
 
 

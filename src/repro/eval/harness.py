@@ -24,6 +24,8 @@ against the ASIC's 16-bit accumulator claim (``core.quant.ACC_BITS``).
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from dataclasses import dataclass
 from typing import Optional
@@ -33,9 +35,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pruning, quant
-from repro.data import synthetic_detection as sd
+from repro.data import detection_datasets as dd
 from repro.eval import detection_map as dm
 from repro.models import snn_yolo as sy
+from repro.train import checkpoint as ckpt
 from repro.train import optimizer as opt
 
 # Evaluation-time postprocess settings: a LOW score threshold and a deep
@@ -101,9 +104,13 @@ def evaluate_detector(
     batch: int = 8,
     iou_threshold: float = 0.5,
     sharded=None,
+    source: Optional[dd.DetectionSource] = None,
 ) -> dict:
-    """mAP@iou of a :class:`~repro.serve.detector.CompiledDetector` on the
-    synthetic eval split (ground truth from ``synthetic_detection.sample``).
+    """mAP@iou of a :class:`~repro.serve.detector.CompiledDetector` on an
+    eval split. ``source`` is any :class:`~repro.data.detection_datasets.
+    DetectionSource` — the synthetic generator by default, or a COCO/VOC
+    loader (``detection_datasets.parse_dataset_spec``) for real annotated
+    frames; ``n_images`` clamps to a finite source's split size.
 
     The handle's own postprocess settings are respected — build the
     detector with :func:`compile_eval_detector` (low threshold, deep
@@ -115,6 +122,10 @@ def evaluate_detector(
     the pooled match stats. The result is bit-identical to this single-host
     path for any shard count (tests/test_sharded_eval.py).
     """
+    source = source or dd.SyntheticSource()
+    cap = source.num_eval_images(split)
+    if cap is not None:
+        n_images = min(n_images, cap)
     if sharded is not None:
         from repro.eval import sharded as se
 
@@ -124,10 +135,10 @@ def evaluate_detector(
         )
         return se.evaluate_detector_sharded(
             det, n_images=n_images, split=split, iou_threshold=iou_threshold,
-            eval_cfg=eval_cfg,
+            eval_cfg=eval_cfg, source=source,
         )
     cfg = det.cfg
-    images, gts = sd.eval_set(
+    images, gts = source.eval_set(
         n_images, split=split, hw=cfg.input_hw, grid_div=grid_div(cfg),
         num_anchors=cfg.num_anchors, num_classes=cfg.num_classes,
     )
@@ -149,6 +160,57 @@ def compile_eval_detector(cfg, params, bn, **kw):
     return sy.compile_detector(cfg, params, bn, **kw)
 
 
+# ------------------------------------------------------------- checkpoints --
+
+# sidecar inside each committed step dir; makes a detector checkpoint
+# self-describing (restore rebuilds the matching SNNDetConfig from it)
+DETECTOR_CONFIG_FILE = "detector_config.json"
+
+
+def save_detector_checkpoint(root: str, step: int, params, bn, cfg) -> str:
+    """Commit ``{"params", "bn"}`` plus the full config as an atomic
+    detector checkpoint under ``root`` (``train/checkpoint.py`` layout).
+    The config sidecar rides inside the step dir, so the rename-commit
+    covers it too — a reader can never see weights without their config.
+    Returns the committed directory."""
+    blob = json.dumps(sy.config_to_dict(cfg), indent=1).encode()
+    return ckpt.save(root, step, {"params": params, "bn": bn},
+                     extra_files={DETECTOR_CONFIG_FILE: blob})
+
+
+def restore_detector_checkpoint(root: str, *, step: Optional[int] = None,
+                                cfg: Optional[sy.SNNDetConfig] = None):
+    """Restore (cfg, params, bn, step) from a detector checkpoint.
+
+    ``step`` defaults to the latest committed step; ``cfg`` defaults to the
+    checkpoint's own config sidecar. Pass ``cfg`` explicitly to restore a
+    bare train-state checkpoint (e.g. ``ft.Supervisor``'s, which carries
+    ``params``/``bn``/``opt`` but no sidecar — the extra optimizer leaves
+    are ignored). A config/weights mismatch surfaces as
+    ``train.checkpoint.restore``'s missing-vs-extra leaf-path ValueError.
+    """
+    step = step if step is not None else ckpt.latest_step(root)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint under {root}")
+    if cfg is None:
+        cfg_path = os.path.join(root, f"step_{step:09d}", DETECTOR_CONFIG_FILE)
+        if not os.path.exists(cfg_path):
+            raise FileNotFoundError(
+                f"{cfg_path} missing — step {step} is not a detector "
+                "checkpoint (train-state checkpoints from ft.Supervisor "
+                "carry no config sidecar); pass cfg= to restore anyway"
+            )
+        with open(cfg_path) as f:
+            cfg = sy.config_from_dict(json.load(f))
+    p_shapes, bn_shapes = jax.eval_shape(
+        lambda k: sy.init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+    state, step = ckpt.restore(
+        root, {"params": p_shapes, "bn": bn_shapes}, step=step
+    )
+    return cfg, state["params"], state["bn"], step
+
+
 # ------------------------------------------------------------------- train --
 
 
@@ -166,8 +228,12 @@ def train_steps(
     start_index: int = 0,
     log_every: int = 50,
     verbose: bool = True,
+    source: Optional[dd.DetectionSource] = None,
 ):
-    """Train (or fine-tune) the detector on the synthetic train split.
+    """Train (or fine-tune) the detector on a train split — synthetic by
+    default, or any :class:`~repro.data.detection_datasets.DetectionSource`
+    (COCO/VOC loaders letterbox to ``cfg.input_hw`` and encode the same
+    grid targets, so the loss and decode stay consistent).
 
     ``grad_mask``: optional pytree of {0,1} masks (pruning.mask_tree
     layout) — masked entries get zero gradient AND are re-zeroed after
@@ -201,9 +267,10 @@ def train_steps(
             new_p = jax.tree_util.tree_map(lambda w, m: w * m, new_p, grad_mask)
         return new_p, new_bn, new_o, loss
 
-    stream = sd.batches(batch, hw=cfg.input_hw, steps=steps,
-                        grid_div=grid_div(cfg), num_anchors=cfg.num_anchors,
-                        num_classes=cfg.num_classes, start_index=start_index)
+    source = source or dd.SyntheticSource()
+    stream = source.batches(batch, hw=cfg.input_hw, steps=steps,
+                            grid_div=grid_div(cfg), num_anchors=cfg.num_anchors,
+                            num_classes=cfg.num_classes, start_index=start_index)
     losses = []
     for k, b in enumerate(stream):
         params, bn, opt_state, loss = step(
@@ -264,6 +331,8 @@ def run_pipeline(
     seed: int = 0,
     conv_exec: str = "dense",
     eval_shards: int = 1,
+    source: Optional[dd.DetectionSource] = None,
+    ckpt_dir: Optional[str] = None,
     verbose: bool = True,
 ) -> EvalReport:
     """The scaled-down Table I / Fig 15 reproduction.
@@ -281,6 +350,16 @@ def run_pipeline(
     ``eval_shards > 1`` routes every stage evaluation through the
     mesh-sharded path (``repro.eval.sharded``); the reduction is exact, so
     the reported numbers are bit-identical to the single-host run.
+
+    ``source`` swaps the dataset for BOTH training and evaluation (a
+    COCO/VOC :class:`~repro.data.detection_datasets.DetectionSource`;
+    synthetic by default). ``ckpt_dir`` commits a self-describing detector
+    checkpoint after the float-train stage (step = ``steps``) and after
+    the QAT stage (step = ``steps + finetune_steps``) via
+    :func:`save_detector_checkpoint`, so ``launch/serve.py --arch snn-det
+    --checkpoint <dir>`` restores the latest (QAT) weights and serves
+    them — the end of the "real annotations in → trained weights restored
+    → served mAP out" path.
     """
     t0 = time.time()
     base = cfg if cfg is not None else demo_config()
@@ -298,21 +377,28 @@ def run_pipeline(
     stages: dict = {}
     losses: dict = {}
     sharded_cfg = eval_shards if eval_shards > 1 else None
+    source = source or dd.SyntheticSource()
 
     def _eval(tag, c, p, b):
         det = compile_eval_detector(c, p, b)
         stages[tag] = evaluate_detector(det, n_images=eval_images,
-                                        sharded=sharded_cfg)
+                                        sharded=sharded_cfg, source=source)
         if verbose:
             aps = ", ".join(f"{a:.3f}" for a in stages[tag]["per_class_ap"])
             print(f"  [{tag}] mAP@0.5 {stages[tag]['map']:.3f}  (per-class {aps})")
         return det
 
     if verbose:
-        print(f"  train {steps} steps (float, mixed (1,{base.full_t}))")
+        print(f"  train {steps} steps (float, mixed (1,{base.full_t}), "
+              f"dataset {source.name})")
     params, bn, opt_state, losses["train"] = train_steps(
-        float_cfg, steps=steps, batch=batch, seed=seed, verbose=verbose
+        float_cfg, steps=steps, batch=batch, seed=seed, verbose=verbose,
+        source=source,
     )
+    if ckpt_dir:
+        save_detector_checkpoint(ckpt_dir, steps, params, bn, float_cfg)
+        if verbose:
+            print(f"  saved float checkpoint (step {steps}) to {ckpt_dir}")
     _eval("trained", float_cfg, params, bn)
 
     pruned = pruning.prune_tree(params, prune_rate)
@@ -327,8 +413,15 @@ def run_pipeline(
     qp, qbn, _, losses["qat"] = train_steps(
         qat_train_cfg, steps=finetune_steps, batch=batch, params=pruned, bn=bn,
         grad_mask=mask, lr_peak=3e-4, start_index=steps * batch,
-        verbose=verbose,
+        verbose=verbose, source=source,
     )
+    if ckpt_dir:
+        save_detector_checkpoint(
+            ckpt_dir, steps + finetune_steps, qp, qbn, quant_cfg
+        )
+        if verbose:
+            print(f"  saved QAT checkpoint (step {steps + finetune_steps}) "
+                  f"to {ckpt_dir}")
     det = _eval("qat", quant_cfg, qp, qbn)
 
     # Fig 15: the same final weights under both time-step schedules
@@ -340,6 +433,7 @@ def run_pipeline(
             ),
             n_images=eval_images,
             sharded=sharded_cfg,
+            source=source,
         ),
     }
     report = EvalReport(

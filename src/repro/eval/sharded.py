@@ -367,12 +367,15 @@ def evaluate_detector_sharded(
     split: str = "val",
     iou_threshold: float = 0.5,
     eval_cfg: Optional[ShardedEvalConfig] = None,
+    source=None,
 ) -> dict:
     """Sharded ``harness.evaluate_detector``: each shard materializes only
-    its stripe of the synthetic eval split (the dataset is deterministic
-    per (split, index), so no shared filesystem is needed), runs
-    forward→decode→NMS through the compile-once executor plan in
-    ``eval_cfg.batch`` chunks, and the match stats reduce through
+    its stripe of the eval split (``source`` — any
+    ``repro.data.detection_datasets.DetectionSource``; the synthetic
+    generator by default. Both the generator and the file-backed loaders
+    are deterministic per (split, index), so no shared filesystem is
+    needed), runs forward→decode→NMS through the compile-once executor
+    plan in ``eval_cfg.batch`` chunks, and the match stats reduce through
     ``pool_stats``. mAP is bit-identical to the single-host path for any
     shard count (per-image outputs are bitwise invariant to batch grouping:
     integer-domain conv accumulation plus elementwise float stages).
@@ -398,11 +401,16 @@ def evaluate_detector_sharded(
 
     eval_cfg = eval_cfg or ShardedEvalConfig()
     cfg = det.cfg
+    from repro.data import detection_datasets as dd
     from repro.eval.harness import grid_div
 
+    source = source or dd.SyntheticSource()
+    cap = source.num_eval_images(split)
+    if cap is not None:
+        n_images = min(n_images, cap)
     stats = []
     for s in range(eval_cfg.n_shards):
-        images, gts = sd.eval_set(
+        images, gts = source.eval_set(
             n_images, split=split, hw=cfg.input_hw, grid_div=grid_div(cfg),
             num_anchors=cfg.num_anchors, num_classes=cfg.num_classes,
             shard_id=s, n_shards=eval_cfg.n_shards,

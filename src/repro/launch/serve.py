@@ -10,6 +10,8 @@ Usage:
       --requests 8 --slots 4 --max-new 16
   PYTHONPATH=src python -m repro.launch.serve --arch snn-det \
       --requests 8 --slots 4 --frames 3 [--conv-exec gated|pallas|dense]
+  PYTHONPATH=src python -m repro.launch.serve --arch snn-det --eval-map \
+      --checkpoint /tmp/snn_det_ckpt [--dataset coco:<instances.json>]
 """
 from __future__ import annotations
 
@@ -48,37 +50,61 @@ def _serve_lm(cfg, args):
 
 
 def _serve_detector(cfg, args):
+    from repro.data import detection_datasets as dd
+    from repro.eval import harness
     from repro.models import snn_yolo as sy
     from repro.serve.detector import demo_weights, step_latency_ms, synth_streams
 
-    cfg = dataclasses.replace(cfg, conv_exec=args.conv_exec)
-    params, bn, rng = demo_weights(cfg)
-    det = sy.compile_detector(cfg, params, bn)
+    source = dd.parse_dataset_spec(args.dataset)
+    if args.checkpoint:
+        # trained weights: the checkpoint's config sidecar replaces the
+        # --arch smoke config (input size / channels must match the saved
+        # tree); --conv-exec still overrides the executor if given
+        cfg, params, bn, step = harness.restore_detector_checkpoint(args.checkpoint)
+        if args.conv_exec:
+            cfg = dataclasses.replace(cfg, conv_exec=args.conv_exec)
+        rng = np.random.default_rng(0)
+        print(f"restored checkpoint step {step} from {args.checkpoint} "
+              f"({cfg.arch_id}, input {cfg.input_hw}, "
+              f"conv_exec {cfg.conv_exec}, weight_bits {cfg.weight_bits})")
+    else:
+        cfg = dataclasses.replace(cfg, conv_exec=args.conv_exec or "gated")
+        params, bn, rng = demo_weights(cfg)
+    if args.eval_map and args.checkpoint:
+        # real weights + --eval-map: compile with EVALUATION postprocess
+        # settings (low threshold, deep budget) so the reported number is
+        # the same mAP the accuracy harness would report — and is checked
+        # against it bit-exactly below
+        det = harness.compile_eval_detector(cfg, params, bn)
+    else:
+        det = sy.compile_detector(cfg, params, bn)
     eng = Engine(det, n_slots=args.slots)
     gts = None
+    n_requests = args.requests
     if args.eval_map:
-        # serve the synthetic val split (one frame per request — each
-        # admission cold-starts its slot) and score the SERVED detections
-        from repro.data import synthetic_detection as sd
-        from repro.eval.harness import grid_div
-
-        images, gts = sd.eval_set(
-            args.requests, hw=cfg.input_hw, grid_div=grid_div(cfg),
+        # serve the val split (one frame per request — each admission
+        # cold-starts its slot) and score the SERVED detections
+        cap = source.num_eval_images("val")
+        if cap is not None and cap < n_requests:
+            print(f"  ({args.dataset} has {cap} val images; serving all of them)")
+            n_requests = cap
+        images, gts = source.eval_set(
+            n_requests, hw=cfg.input_hw, grid_div=harness.grid_div(cfg),
             num_anchors=cfg.num_anchors, num_classes=cfg.num_classes,
         )
         streams = [img[None] for img in images]
-        total_frames = args.requests
+        total_frames = n_requests
     else:
-        streams = synth_streams(rng, args.requests, args.frames, cfg.input_hw)
-        total_frames = args.requests * args.frames
+        streams = synth_streams(rng, n_requests, args.frames, cfg.input_hw)
+        total_frames = n_requests * args.frames
     for r, frames in enumerate(streams):
         eng.submit(FrameRequest(rid=r, frames=frames))
     t0 = time.time()
     done = eng.run()
     dt = time.time() - t0
-    assert len(done) == args.requests
+    assert len(done) == n_requests
     lat = step_latency_ms(eng.core.step_wall)
-    print(f"{args.arch}[{args.conv_exec}]: served {args.requests} streams "
+    print(f"{args.arch}[{cfg.conv_exec}]: served {n_requests} streams "
           f"({total_frames} frames) in {dt:.1f}s — {total_frames/dt:.1f} frames/s, "
           f"step p50 {lat['step_p50_ms']:.1f}ms p95 {lat['step_p95_ms']:.1f}ms")
     for r in sorted(done, key=lambda r: r.rid)[:3]:
@@ -86,14 +112,13 @@ def _serve_detector(cfg, args):
         print(f"  req {r.rid}: {len(r.out)} frames, detections/frame {counts}")
     if gts is not None:
         from repro.eval import detection_map as dm
+        from repro.eval import sharded as se
 
         preds = [r.out[0] for r in sorted(done, key=lambda r: r.rid)]
         if args.eval_shards > 1:
             # score the served detections through the mesh-sharded reduction
             # (striped match stats, collective gather) — bit-identical to
             # the single-host sweep below for any shard count
-            from repro.eval import sharded as se
-
             rep = se.evaluate_predictions_sharded(
                 preds, gts, num_classes=cfg.num_classes, iou_threshold=0.5,
                 eval_cfg=se.ShardedEvalConfig(n_shards=args.eval_shards),
@@ -104,11 +129,31 @@ def _serve_detector(cfg, args):
                 preds, gts, num_classes=cfg.num_classes, iou_threshold=0.5
             )
             shard_note = ""
+        weights_note = (
+            "restored trained weights" if args.checkpoint else
+            f"at the serving score threshold ({det.score_threshold}) — demo "
+            "weights are random-calibrated; pass --checkpoint <dir> for "
+            "representative accuracy"
+        )
         print(f"  served-detections mAP@0.5 {rep['map']:.3f} over "
-              f"{rep['n_images']} val frames{shard_note} at the serving "
-              f"score threshold "
-              f"({det.score_threshold}) — demo weights are random-calibrated; "
-              "load a trained checkpoint for representative accuracy")
+              f"{rep['n_images']} val frames ({args.dataset})"
+              f"{shard_note} — {weights_note}")
+        if args.checkpoint:
+            # the end-to-end contract: the mAP of detections that went
+            # through admission/slot batching must equal the accuracy
+            # harness scoring the same weights on the same split, bit for
+            # bit (per-image outputs are batch-grouping invariant)
+            ref = harness.evaluate_detector(det, n_images=n_requests,
+                                            source=source)
+            identical = se.reports_identical(rep, ref)
+            print(f"  harness parity: served {rep['map']!r} vs harness "
+                  f"{ref['map']!r} — "
+                  f"{'BIT-IDENTICAL' if identical else 'MISMATCH'}")
+            if not identical:
+                raise SystemExit(
+                    "served-detections mAP does not match "
+                    "harness.evaluate_detector on the restored weights"
+                )
 
 
 def main(argv=None):
@@ -120,12 +165,27 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--frames", type=int, default=3,
                     help="frames per stream (snn-det requests)")
-    ap.add_argument("--conv-exec", default="gated",
+    ap.add_argument("--conv-exec", default=None,
                     choices=["dense", "gated", "pallas"],
-                    help="detector conv executor (snn-det only)")
+                    help="detector conv executor (snn-det only; default: "
+                         "gated, or the checkpoint's own executor with "
+                         "--checkpoint)")
+    ap.add_argument("--checkpoint", default=None, metavar="DIR",
+                    help="restore trained params/BN (and config) from a "
+                         "detector checkpoint dir — written by "
+                         "eval/harness.run_pipeline(ckpt_dir=...), "
+                         "benchmarks/eval_map.py --ckpt-dir or "
+                         "examples/train_snn_detector.py — instead of "
+                         "random-calibrated demo weights (snn-det only)")
+    ap.add_argument("--dataset", default="synthetic",
+                    help="--eval-map split: synthetic | coco:<instances."
+                         "json> | voc:<dir> (snn-det only)")
     ap.add_argument("--eval-map", action="store_true",
-                    help="serve the synthetic val split and report mAP@0.5 "
-                         "of the SERVED detections (snn-det only)")
+                    help="serve the val split and report mAP@0.5 of the "
+                         "SERVED detections (snn-det only); with "
+                         "--checkpoint the score uses evaluation "
+                         "postprocess settings and is asserted bit-exact "
+                         "against harness.evaluate_detector")
     ap.add_argument("--eval-shards", type=int, default=1,
                     help="score the served detections through the "
                          "mesh-sharded mAP reduction (with --eval-map)")

@@ -93,6 +93,29 @@ class SNNDetConfig:
         return (self.input_hw[0] // f, self.input_hw[1] // f)
 
 
+def config_to_dict(cfg: "SNNDetConfig") -> dict:
+    """JSON-serializable dict of the full config — the self-describing
+    sidecar detector checkpoints carry (``harness.save_detector_checkpoint``)
+    so a restore needs no out-of-band knowledge of the architecture."""
+    return dataclasses.asdict(cfg)
+
+
+def config_from_dict(d: dict) -> "SNNDetConfig":
+    """Inverse of :func:`config_to_dict` — JSON round-trips tuples as
+    lists, so the tuple-typed fields are re-tupled before construction."""
+    d = dict(d)
+    unknown = set(d) - {f.name for f in dataclasses.fields(SNNDetConfig)}
+    if unknown:
+        raise ValueError(f"unknown SNNDetConfig fields {sorted(unknown)} — "
+                         "checkpoint written by an incompatible version?")
+    for k in ("input_hw", "block_hw"):
+        if k in d:
+            d[k] = tuple(d[k])
+    if "stage_channels" in d:
+        d["stage_channels"] = tuple(tuple(p) for p in d["stage_channels"])
+    return SNNDetConfig(**d)
+
+
 # ----------------------------------------------------------------- params --
 
 

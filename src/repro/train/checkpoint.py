@@ -20,6 +20,10 @@ Design points for the 1000+ node posture:
   degenerate case of that protocol.
 * **Self-describing**: manifest carries the pytree structure, so restore
   needs no template (but validates against one when given).
+* **Failure-surfacing**: a background write that dies (disk full, perms)
+  records its exception; ``wait_pending()`` re-raises the first one, and
+  ``gc_old`` joins in-flight writers before deleting their steps so
+  delete can't race a rename-commit.
 """
 from __future__ import annotations
 
@@ -27,11 +31,14 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+from dataclasses import dataclass
+from typing import Any, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_RESERVED_FILES = ("manifest.json",)
 
 
 def _flatten_with_paths(tree: Any):
@@ -41,33 +48,74 @@ def _flatten_with_paths(tree: Any):
     return paths, leaves, treedef
 
 
-def save(root: str, step: int, tree: Any) -> str:
-    """Synchronous atomic save. Returns the committed directory."""
+def save(root: str, step: int, tree: Any, *,
+         extra_files: Optional[Mapping[str, bytes]] = None) -> str:
+    """Synchronous atomic save. Returns the committed directory.
+
+    ``extra_files``: {filename: bytes} sidecars (e.g. a config json) written
+    into the staging dir before the rename — they commit atomically with
+    the checkpoint, so a reader never sees a step dir missing its sidecar.
+    """
     paths, leaves, _ = _flatten_with_paths(tree)
     host = [np.asarray(jax.device_get(l)) for l in leaves]
-    return _write(root, step, paths, host)
+    return _write(root, step, paths, host, extra_files)
 
 
-_PENDING: list[threading.Thread] = []
+@dataclass
+class _PendingSave:
+    """Bookkeeping for one in-flight async write: which (root, step) the
+    thread is committing, and the exception it died with (if any) — daemon
+    threads swallow exceptions, so without this record a failed write
+    (disk full, permissions) would silently lose the checkpoint."""
+
+    root: str
+    step: int
+    thread: threading.Thread
+    error: Optional[BaseException] = None
 
 
-def save_async(root: str, step: int, tree: Any) -> threading.Thread:
-    """Snapshot to host, then commit on a background thread."""
+_PENDING: list[_PendingSave] = []
+
+
+def save_async(root: str, step: int, tree: Any, *,
+               extra_files: Optional[Mapping[str, bytes]] = None) -> threading.Thread:
+    """Snapshot to host, then commit on a background thread.
+
+    A write failure is recorded on the pending entry and re-raised by the
+    next :func:`wait_pending` — call it before exit (ft.Supervisor.run and
+    the training examples do) or the failure is lost with the process.
+    """
     paths, leaves, _ = _flatten_with_paths(tree)
     host = [np.asarray(jax.device_get(l)) for l in leaves]  # D2H barrier only
-    t = threading.Thread(target=_write, args=(root, step, paths, host), daemon=True)
+    pending = _PendingSave(root=os.path.abspath(root), step=step, thread=None)
+
+    def _run():
+        try:
+            _write(root, step, paths, host, extra_files)
+        except BaseException as e:  # noqa: BLE001 — recorded, re-raised later
+            pending.error = e
+
+    t = threading.Thread(target=_run, daemon=True)
+    pending.thread = t
     t.start()
-    _PENDING.append(t)
+    _PENDING.append(pending)
     return t
 
 
 def wait_pending():
-    for t in _PENDING:
-        t.join()
+    """Join every in-flight async save; re-raise the FIRST write failure
+    (in submission order) after all writers have stopped."""
+    first: Optional[_PendingSave] = None
+    for p in _PENDING:
+        p.thread.join()
+        if p.error is not None and first is None:
+            first = p
     _PENDING.clear()
+    if first is not None:
+        raise first.error
 
 
-def _write(root: str, step: int, paths, host_leaves) -> str:
+def _write(root: str, step: int, paths, host_leaves, extra_files=None) -> str:
     final = os.path.join(root, f"step_{step:09d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -80,6 +128,11 @@ def _write(root: str, step: int, paths, host_leaves) -> str:
         manifest["leaves"].append(
             {"path": p, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
         )
+    for fname, blob in (extra_files or {}).items():
+        if fname in _RESERVED_FILES or fname.startswith("leaf_"):
+            raise ValueError(f"extra_files name {fname!r} collides with checkpoint layout")
+        with open(os.path.join(tmp, fname), "wb") as f:
+            f.write(blob)
     mpath = os.path.join(tmp, "manifest.json")
     with open(mpath, "w") as f:
         json.dump(manifest, f)
@@ -91,15 +144,28 @@ def _write(root: str, step: int, paths, host_leaves) -> str:
     return final
 
 
-def latest_step(root: str) -> Optional[int]:
+def _committed_steps(root: str) -> list[int]:
+    """Step numbers of COMMITTED checkpoints: a ``step_*`` dir that is not
+    a ``.tmp`` staging dir, parses as a step, and holds a manifest. The ONE
+    predicate shared by latest_step and gc_old — junk dirs (crashed
+    writers, stray files) are invisible to both."""
     if not os.path.isdir(root):
-        return None
-    steps = [
-        int(d.split("_")[1])
-        for d in os.listdir(root)
-        if d.startswith("step_") and not d.endswith(".tmp")
-        and os.path.exists(os.path.join(root, d, "manifest.json"))
-    ]
+        return []
+    steps = []
+    for d in os.listdir(root):
+        if not d.startswith("step_") or d.endswith(".tmp"):
+            continue
+        try:
+            step = int(d.split("_")[1])
+        except (IndexError, ValueError):
+            continue
+        if os.path.exists(os.path.join(root, d, "manifest.json")):
+            steps.append(step)
+    return sorted(steps)
+
+
+def latest_step(root: str) -> Optional[int]:
+    steps = _committed_steps(root)
     return max(steps) if steps else None
 
 
@@ -116,6 +182,18 @@ def restore(root: str, template: Any, *, step: Optional[int] = None, shardings: 
     by_path = {e["path"]: e for e in manifest["leaves"]}
 
     paths, leaves, treedef = _flatten_with_paths(template)
+    missing = [p for p in paths if p not in by_path]
+    if missing:
+        # a config/checkpoint mismatch, not a corrupt file: say exactly
+        # which leaves each side has that the other doesn't
+        extra = sorted(set(by_path) - set(paths))
+        raise ValueError(
+            f"checkpoint {d} does not match the restore template: "
+            f"template leaves missing from the checkpoint: {missing}; "
+            f"checkpoint leaves absent from the template: {extra or '[]'} "
+            "— the config that built the template differs from the one "
+            "that saved the checkpoint"
+        )
     out = []
     flat_sh = treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(leaves)
     for p, tmpl, sh in zip(paths, leaves, flat_sh):
@@ -129,11 +207,24 @@ def restore(root: str, template: Any, *, step: Optional[int] = None, shardings: 
 
 
 def gc_old(root: str, keep: int = 3):
-    """Keep the newest `keep` committed checkpoints, drop the rest."""
-    if not os.path.isdir(root):
+    """Keep the newest ``keep`` COMMITTED checkpoints, drop the rest.
+
+    Only committed dirs (the :func:`latest_step` predicate) count toward
+    ``keep`` and only committed dirs are deleted — an uncommitted junk dir
+    (no manifest) used to consume a keep slot and evict a real checkpoint,
+    and a live writer's ``.tmp`` staging dir must never be touched. Before
+    deleting a step, any in-flight :func:`save_async` writer for that step
+    is joined, so the delete cannot race the writer's rename-commit (which
+    would resurrect a just-deleted step as a stale "newest" checkpoint).
+    """
+    committed = _committed_steps(root)
+    doomed = committed[:-keep] if keep > 0 else committed
+    if not doomed:
         return
-    steps = sorted(
-        d for d in os.listdir(root) if d.startswith("step_") and not d.endswith(".tmp")
-    )
-    for d in steps[:-keep]:
-        shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+    doomed_set = set(doomed)
+    root_abs = os.path.abspath(root)
+    for p in list(_PENDING):
+        if p.root == root_abs and p.step in doomed_set:
+            p.thread.join()
+    for step in doomed:
+        shutil.rmtree(os.path.join(root, f"step_{step:09d}"), ignore_errors=True)

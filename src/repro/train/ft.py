@@ -123,6 +123,10 @@ class Supervisor:
                 self.restarts += 1
                 if self.restarts > self.max_restarts:
                     raise
+                # settle in-flight async saves before picking the restore
+                # point; a failed write re-raises here instead of being
+                # silently dropped by the restart
+                ckpt.wait_pending()
                 last = ckpt.latest_step(self.ckpt_root)
                 if last is None:
                     state, step = init_state(), 0
@@ -131,5 +135,7 @@ class Supervisor:
                         self.ckpt_root, state_template(), shardings=shardings
                     )
                     step = last + 1
+        # joins every async writer AND re-raises the first failed write —
+        # the run is not "done" until its checkpoints are durably committed
         ckpt.wait_pending()
         return state

@@ -1,0 +1,85 @@
+"""Generator for the committed COCO-json fixture (run once; committed so
+the fixture is reproducible and auditable, NOT executed by the suite).
+
+Four tiny synthetic street-scene-ish images at four DIFFERENT resolutions
+— none matching the harness demo input (96, 160), so every consumer
+exercises the letterbox path (pure resize, pad-width, pad-height, and
+both) — stored as binary PPM (numpy-only decode, no imaging dependency),
+with boxes drawn as filled class-colored rectangles so a detector
+actually has something to fit. Annotations use standard COCO structure:
+bbox = [x, y, w, h] absolute pixels, category ids 1..3 mapping to the
+IVS-3cls classes (vehicle / bike / pedestrian).
+
+    python tests/fixtures/coco_fixture/make_fixture.py
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+# (h, w), [(class_idx, cx, cy, bw, bh) normalized]
+SCENES = [
+    ((72, 100), [(0, 0.30, 0.60, 0.34, 0.22), (2, 0.75, 0.55, 0.10, 0.30)]),
+    ((60, 160), [(1, 0.50, 0.70, 0.12, 0.20)]),
+    ((96, 90), [(0, 0.60, 0.75, 0.40, 0.20), (1, 0.20, 0.50, 0.14, 0.18),
+                (2, 0.85, 0.45, 0.08, 0.26)]),
+    ((48, 48), [(2, 0.40, 0.60, 0.18, 0.45)]),
+]
+SHADE = {0: (38, 64, 140), 1: (140, 51, 51), 2: (51, 128, 64)}
+
+
+def render(rng, hw, objs):
+    h, w = hw
+    sky = np.linspace(166, 64, h)[:, None, None]
+    img = np.clip(sky + rng.normal(0, 12, (h, w, 3)), 0, 255)
+    for c, cx, cy, bw, bh in objs:
+        x0, x1 = int((cx - bw / 2) * w), int((cx + bw / 2) * w)
+        y0, y1 = int((cy - bh / 2) * h), int((cy + bh / 2) * h)
+        img[y0:y1, x0:x1] = np.asarray(SHADE[c]) + rng.normal(0, 6, 3)
+    return np.clip(img, 0, 255).astype(np.uint8)
+
+
+def write_ppm(path, arr):
+    h, w, _ = arr.shape
+    with open(path, "wb") as f:
+        f.write(b"P6\n%d %d\n255\n" % (w, h))
+        f.write(arr.tobytes())
+
+
+def main():
+    rng = np.random.default_rng(7)
+    images, annotations = [], []
+    ann_id = 1
+    for i, (hw, objs) in enumerate(SCENES):
+        h, w = hw
+        name = f"img_{i:03d}.ppm"
+        write_ppm(os.path.join(HERE, name), render(rng, hw, objs))
+        images.append({"id": i + 1, "file_name": name, "height": h, "width": w})
+        for c, cx, cy, bw, bh in objs:
+            annotations.append({
+                "id": ann_id, "image_id": i + 1, "category_id": c + 1,
+                "bbox": [round((cx - bw / 2) * w, 2), round((cy - bh / 2) * h, 2),
+                         round(bw * w, 2), round(bh * h, 2)],
+                "area": round(bw * w * bh * h, 2), "iscrowd": 0,
+            })
+            ann_id += 1
+    coco = {
+        "info": {"description": "tiny IVS-3cls-like fixture for repo tests"},
+        "images": images,
+        "annotations": annotations,
+        "categories": [{"id": 1, "name": "vehicle"},
+                       {"id": 2, "name": "bike"},
+                       {"id": 3, "name": "pedestrian"}],
+    }
+    with open(os.path.join(HERE, "instances.json"), "w") as f:
+        json.dump(coco, f, indent=1)
+        f.write("\n")
+    print(f"wrote {len(images)} ppm images + instances.json under {HERE}")
+
+
+if __name__ == "__main__":
+    main()

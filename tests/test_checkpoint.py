@@ -1,10 +1,13 @@
 """Checkpoint/restore + fault tolerance: atomic commit, async save, restore
 with resharding templates, supervisor restart-from-last-good, straggler
-flagging."""
+flagging — plus the lifecycle fixes: gc ignores uncommitted junk and joins
+in-flight writers, failed async writes surface in wait_pending, and
+template/manifest mismatches raise a diagnosable ValueError."""
 from __future__ import annotations
 
 import json
 import os
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +74,108 @@ def test_restore_validates_shape(tmp_path):
     ckpt.save(str(tmp_path), 0, {"w": jnp.zeros((4, 4))})
     with pytest.raises(ValueError):
         ckpt.restore(str(tmp_path), {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32)})
+
+
+def test_gc_ignores_uncommitted_junk(tmp_path):
+    """A junk step dir without a manifest must not consume a keep slot
+    (it used to, evicting a REAL checkpoint) nor be deleted (it might be
+    a foreign writer's staging area), and unparsable names must not
+    crash the sweep."""
+    ckpt.save(str(tmp_path), 1, _tree(1))
+    ckpt.save(str(tmp_path), 3, _tree(3))
+    os.makedirs(tmp_path / "step_000000002")  # junk: no manifest.json
+    os.makedirs(tmp_path / "step_junk")  # junk: unparsable step
+    ckpt.gc_old(str(tmp_path), keep=2)
+    kept = sorted(os.listdir(tmp_path))
+    assert "step_000000001" in kept and "step_000000003" in kept
+    assert "step_000000002" in kept and "step_junk" in kept
+
+
+def test_gc_joins_pending_writer_for_doomed_step(tmp_path, monkeypatch):
+    """gc_old must not race an in-flight save_async commit for a step it
+    is deleting: it joins the writer first (here: a writer that has
+    committed but not yet returned holds gc until released)."""
+    committed, release = threading.Event(), threading.Event()
+    real_write = ckpt._write
+
+    def gated_write(root, step, paths, host, extra_files=None):
+        out = real_write(root, step, paths, host, extra_files)
+        if step == 1:
+            committed.set()
+            assert release.wait(timeout=10)
+        return out
+
+    monkeypatch.setattr(ckpt, "_write", gated_write)
+    ckpt.save_async(str(tmp_path), 1, _tree(1))
+    assert committed.wait(timeout=10)
+    for s in (5, 6):
+        ckpt.save(str(tmp_path), s, _tree(s))
+
+    gc_done = threading.Event()
+
+    def run_gc():
+        ckpt.gc_old(str(tmp_path), keep=2)
+        gc_done.set()
+
+    t = threading.Thread(target=run_gc, daemon=True)
+    t.start()
+    assert not gc_done.wait(timeout=0.3)  # gc is blocked on the writer
+    release.set()
+    assert gc_done.wait(timeout=10)
+    ckpt.wait_pending()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [5, 6]
+
+
+def test_failed_async_write_raises_in_wait_pending(tmp_path, monkeypatch):
+    """A background write that dies (disk full, perms) must not silently
+    lose the checkpoint: wait_pending re-raises the first failure, then
+    clears, so the next wait is clean."""
+
+    def bad_write(root, step, paths, host, extra_files=None):
+        raise OSError("no space left on device")
+
+    monkeypatch.setattr(ckpt, "_write", bad_write)
+    ckpt.save_async(str(tmp_path), 1, _tree())
+    with pytest.raises(OSError, match="no space left"):
+        ckpt.wait_pending()
+    ckpt.wait_pending()  # recorded failures do not repeat
+
+
+def test_restore_mismatch_lists_leaf_paths(tmp_path):
+    """Template leaves absent from the manifest raise a ValueError naming
+    BOTH sides' unmatched paths (not a bare KeyError), so a
+    config/checkpoint mismatch is diagnosable from the message."""
+    ckpt.save(str(tmp_path), 0, {"a": jnp.zeros((2,)), "extra": jnp.ones(())})
+    template = {
+        "a": jax.ShapeDtypeStruct((2,), jnp.float32),
+        "missing_leaf": jax.ShapeDtypeStruct((), jnp.float32),
+    }
+    with pytest.raises(ValueError) as e:
+        ckpt.restore(str(tmp_path), template)
+    msg = str(e.value)
+    assert "missing_leaf" in msg and "extra" in msg
+
+
+def test_restore_tolerates_extra_manifest_leaves(tmp_path):
+    """The inverse direction stays allowed: a template that is a sub-tree
+    of the checkpoint (e.g. {params, bn} out of a {params, bn, opt}
+    train state) restores fine."""
+    ckpt.save(str(tmp_path), 0, {"a": jnp.full((2,), 7.0), "opt": jnp.ones(())})
+    restored, step = ckpt.restore(
+        str(tmp_path), {"a": jax.ShapeDtypeStruct((2,), jnp.float32)}
+    )
+    assert step == 0
+    np.testing.assert_array_equal(np.asarray(restored["a"]), [7.0, 7.0])
+
+
+def test_save_extra_files_commit_atomically(tmp_path):
+    """extra_files sidecars land inside the committed step dir."""
+    ckpt.save(str(tmp_path), 2, _tree(), extra_files={"meta.json": b"{}"})
+    assert (tmp_path / "step_000000002" / "meta.json").read_bytes() == b"{}"
+    with pytest.raises(ValueError, match="collides"):
+        ckpt.save(str(tmp_path), 3, _tree(),
+                  extra_files={"manifest.json": b"x"})
 
 
 def test_supervisor_restarts_after_failures(tmp_path):

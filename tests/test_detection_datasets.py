@@ -1,0 +1,309 @@
+"""Real-data adapter tests: letterbox geometry, the COCO/VOC loaders, the
+committed fixture's pinned checksums, the target↔decode inverse on
+letterboxed real data, and the fixture round-tripped through
+``evaluate_detector`` (single-host vs sharded bit-identical, and through
+a detector-checkpoint save/restore)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.data import detection_datasets as dd
+from repro.data import synthetic_detection as sd
+from repro.eval import detection_map as dm
+from repro.eval import harness
+from repro.eval.sharded import reports_identical
+from repro.models import snn_yolo as sy
+from repro.models.postprocess import postprocess
+
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "fixtures", "coco_fixture")
+FIXTURE_JSON = os.path.join(FIXTURE_DIR, "instances.json")
+CHECKSUMS_PATH = os.path.join(
+    os.path.dirname(__file__), "fixtures", "data_checksums.json"
+)
+with open(CHECKSUMS_PATH) as _f:
+    _COCO_PINNED = json.load(_f)["coco_fixture"]
+HW, GRID_DIV = (96, 160), 16
+
+
+@pytest.fixture(scope="module")
+def coco_source():
+    return dd.CocoJsonSource(FIXTURE_JSON)
+
+
+class TestLetterbox:
+    def test_pure_resize_no_pad(self):
+        """(48, 80) -> (96, 160): uniform 2x, no padding."""
+        img = np.arange(48 * 80 * 3, dtype=np.float32).reshape(48, 80, 3) / 1e5
+        out, (top, left, nh, nw) = dd.letterbox_image(img, (96, 160))
+        assert (top, left, nh, nw) == (0, 0, 96, 160)
+        # nearest-neighbor with integer index math: out[i, j] = img[i//2, j//2]
+        np.testing.assert_array_equal(out[2, 0::2], img[1])
+        np.testing.assert_array_equal(out[2, 1::2], img[1])
+        np.testing.assert_array_equal(out[:, 5], img[:, 2][(np.arange(96) * 48) // 96])
+
+    def test_pad_width(self):
+        """(96, 90) -> (96, 160): height-limited (scale 1), width pads."""
+        img = np.ones((96, 90, 3), np.float32)
+        out, (top, left, nh, nw) = dd.letterbox_image(img, (96, 160))
+        assert (top, left, nh, nw) == (0, 35, 96, 90)
+        assert np.all(out[:, 35:125] == 1.0)
+        assert np.all(out[:, :35] == dd.LETTERBOX_PAD_VALUE)
+        assert np.all(out[:, 125:] == dd.LETTERBOX_PAD_VALUE)
+
+    def test_pad_height(self):
+        """(60, 160) -> (96, 160): width-limited, height pads top 18."""
+        img = np.zeros((60, 160, 3), np.float32)
+        out, geom = dd.letterbox_image(img, (96, 160))
+        assert geom == (18, 0, 60, 160)
+        assert np.all(out[:18] == dd.LETTERBOX_PAD_VALUE)
+        assert np.all(out[78:] == dd.LETTERBOX_PAD_VALUE)
+
+    def test_boxes_follow_placed_pixels(self):
+        """Box transform uses the SAME (top, left, nh, nw) as the pixels:
+        a box centered mid-image maps to the placed region's center."""
+        boxes = np.array([[0.5, 0.5, 0.2, 0.5]], np.float32)
+        out = dd.letterbox_boxes(boxes, (18, 0, 60, 160), (96, 160))
+        np.testing.assert_allclose(
+            out, [[0.5, (0.5 * 60 + 18) / 96, 0.2, 0.5 * 60 / 96]], atol=1e-7
+        )
+
+    def test_grayscale_promotes_to_rgb(self):
+        out, _ = dd.letterbox_image(np.zeros((10, 10), np.float32), (20, 20))
+        assert out.shape == (20, 20, 3)
+
+
+class TestCocoFixture:
+    def test_classes_match_paper_3cls(self, coco_source):
+        assert coco_source.class_names == ("vehicle", "bike", "pedestrian")
+        assert coco_source.num_eval_images("val") == 4
+
+    def test_pinned_checksums(self, coco_source):
+        """The letterboxed images, grid targets and gt boxes are pinned in
+        data_checksums.json — regenerate via `make regen-goldens` ONLY on
+        an intentional loader/fixture change."""
+        import zlib
+
+        n = coco_source.num_eval_images("val")
+        images, gts = coco_source.eval_set(n, hw=HW, grid_div=GRID_DIV)
+        batch = next(coco_source.batches(n, hw=HW, steps=1, grid_div=GRID_DIV))
+        for pin in _COCO_PINNED["samples"]:
+            i = pin["index"]
+            crc = lambda a: zlib.crc32(np.ascontiguousarray(a).tobytes())
+            assert crc(images[i]) == pin["image_crc32"], f"image {i} changed"
+            assert crc(batch["target"][i]) == pin["target_crc32"], f"target {i}"
+            assert crc(gts[i]["boxes"]) == pin["boxes_crc32"], f"boxes {i}"
+            assert gts[i]["classes"].tolist() == pin["classes"]
+
+    def test_eval_set_structure_matches_synthetic(self, coco_source):
+        """The loader emits EXACTLY the {boxes, classes} structure the
+        synthetic split produces (the DetectionSource contract)."""
+        images, gts = coco_source.eval_set(4, hw=HW, grid_div=GRID_DIV)
+        s_images, s_gts = sd.eval_set(4, hw=HW, grid_div=GRID_DIV)
+        assert images.shape == s_images.shape and images.dtype == s_images.dtype
+        for g, s in zip(gts, s_gts):
+            assert set(g) == set(s)
+            assert g["boxes"].dtype == s["boxes"].dtype and g["boxes"].ndim == 2
+            assert g["classes"].dtype == s["classes"].dtype
+
+    def test_shard_union_is_single_host_set(self, coco_source):
+        images, gts = coco_source.eval_set(4, hw=HW, grid_div=GRID_DIV)
+        i0, g0 = coco_source.eval_set(4, hw=HW, grid_div=GRID_DIV,
+                                      shard_id=0, n_shards=2)
+        i1, g1 = coco_source.eval_set(4, hw=HW, grid_div=GRID_DIV,
+                                      shard_id=1, n_shards=2)
+        merged = np.empty_like(images)
+        merged[0::2], merged[1::2] = i0, i1
+        np.testing.assert_array_equal(merged, images)
+        for i, g in enumerate(g0):
+            np.testing.assert_array_equal(g["boxes"], gts[2 * i]["boxes"])
+
+    def test_batches_cycle_and_stripe(self, coco_source):
+        """4 records cycle (index modulo) and host striping matches the
+        synthetic contract: host h of n owns indices h, h+n, ..."""
+        single = next(coco_source.batches(4, hw=HW, steps=1, grid_div=GRID_DIV))
+        h0 = next(coco_source.batches(2, hw=HW, steps=1, grid_div=GRID_DIV,
+                                      host_id=0, n_hosts=2))
+        h1 = next(coco_source.batches(2, hw=HW, steps=1, grid_div=GRID_DIV,
+                                      host_id=1, n_hosts=2))
+        merged = np.empty_like(single["image"])
+        merged[0::2], merged[1::2] = h0["image"], h1["image"]
+        np.testing.assert_array_equal(merged, single["image"])
+        wrapped = next(coco_source.batches(8, hw=HW, steps=1, grid_div=GRID_DIV))
+        np.testing.assert_array_equal(wrapped["image"][4:], wrapped["image"][:4])
+
+    def test_class_count_mismatch_raises(self, coco_source):
+        with pytest.raises(ValueError, match="classes"):
+            coco_source.eval_set(4, hw=HW, num_classes=2)
+
+    def test_target_decode_inverse_on_letterboxed_real_data(self, coco_source):
+        """The exact-inverse contract survives letterboxing: an oracle head
+        built from the fixture's grid target decodes + postprocesses to
+        mAP 1.0 against the letterboxed ground truth."""
+        batch = next(coco_source.batches(4, hw=HW, steps=1, grid_div=GRID_DIV))
+        _, gts = coco_source.eval_set(4, hw=HW, grid_div=GRID_DIV)
+        for i in range(4):
+            tgt = batch["target"][i]
+            if int(tgt[..., 4].sum()) != len(gts[i]["boxes"]):
+                continue  # cell/anchor collision: inverse can't be exact
+            head = np.zeros_like(tgt)
+            off = np.clip(tgt[..., 0:2], 1e-4, 1 - 1e-4)
+            head[..., 0:2] = np.log(off / (1 - off))
+            head[..., 2:4] = tgt[..., 2:4]
+            head[..., 4] = np.where(tgt[..., 4] > 0, 12.0, -12.0)
+            head[..., 5:] = np.where(tgt[..., 5:] > 0, 12.0, -12.0)
+            dets = postprocess(head[None], sy.DEFAULT_ANCHORS,
+                               score_threshold=0.25, max_detections=32)
+            score = dm.map50(dm.detections_to_predictions(dets), [gts[i]],
+                             num_classes=3)
+            assert score == pytest.approx(1.0, abs=1e-6), f"image {i}"
+
+
+class TestVocLoader:
+    def _write_voc(self, root, with_layout=True):
+        ann = os.path.join(root, "Annotations") if with_layout else root
+        imgd = os.path.join(root, "JPEGImages") if with_layout else root
+        os.makedirs(ann, exist_ok=True)
+        os.makedirs(imgd, exist_ok=True)
+        img = np.full((40, 60, 3), 128, np.uint8)
+        with open(os.path.join(imgd, "a.ppm"), "wb") as f:
+            f.write(b"P6\n60 40\n255\n" + img.tobytes())
+        xml = """<annotation><filename>a.ppm</filename>
+          <size><width>60</width><height>40</height><depth>3</depth></size>
+          <object><name>vehicle</name>
+            <bndbox><xmin>6</xmin><ymin>8</ymin><xmax>30</xmax><ymax>24</ymax></bndbox>
+          </object>
+          <object><name>pedestrian</name>
+            <bndbox><xmin>42</xmin><ymin>10</ymin><xmax>48</xmax><ymax>30</ymax></bndbox>
+          </object></annotation>"""
+        with open(os.path.join(ann, "a.xml"), "w") as f:
+            f.write(xml)
+
+    def test_voc_layout_and_boxes(self, tmp_path):
+        self._write_voc(str(tmp_path))
+        src = dd.VocXmlSource(str(tmp_path),
+                              class_names=("vehicle", "bike", "pedestrian"))
+        assert src.num_eval_images("val") == 1
+        _, gts = src.eval_set(1, hw=(40, 60))
+        np.testing.assert_allclose(
+            gts[0]["boxes"],
+            [[18 / 60, 16 / 40, 24 / 60, 16 / 40],
+             [45 / 60, 20 / 40, 6 / 60, 20 / 40]],
+            atol=1e-6,
+        )
+        np.testing.assert_array_equal(gts[0]["classes"], [0, 2])
+
+    def test_flat_dir_and_inferred_classes(self, tmp_path):
+        self._write_voc(str(tmp_path), with_layout=False)
+        src = dd.VocXmlSource(str(tmp_path))
+        assert src.class_names == ("pedestrian", "vehicle")  # sorted names
+
+    def test_unknown_class_raises(self, tmp_path):
+        self._write_voc(str(tmp_path))
+        with pytest.raises(ValueError, match="pedestrian"):
+            dd.VocXmlSource(str(tmp_path), class_names=("vehicle",))
+
+
+class TestParseSpec:
+    def test_synthetic_default(self):
+        assert isinstance(dd.parse_dataset_spec(None), dd.SyntheticSource)
+        assert isinstance(dd.parse_dataset_spec("synthetic"), dd.SyntheticSource)
+
+    def test_coco_spec(self):
+        src = dd.parse_dataset_spec(f"coco:{FIXTURE_JSON}")
+        assert isinstance(src, dd.CocoJsonSource)
+
+    def test_bad_specs_raise(self):
+        for spec in ("coco:", "imagenet:/x", "nonsense"):
+            with pytest.raises(ValueError):
+                dd.parse_dataset_spec(spec)
+
+    def test_sources_satisfy_protocol(self):
+        assert isinstance(dd.SyntheticSource(), dd.DetectionSource)
+        assert isinstance(dd.parse_dataset_spec(f"coco:{FIXTURE_JSON}"),
+                          dd.DetectionSource)
+
+
+# -------------------------------------------- end-to-end on a compiled det --
+
+
+@pytest.fixture(scope="module")
+def small_det():
+    """One compiled quantized detector at a reduced (48, 80) input —
+    shared by the round-trip tests to keep compile count down."""
+    from repro.serve.detector import demo_weights
+
+    cfg = dataclasses.replace(harness.demo_config(), input_hw=(48, 80))
+    params, bn, _ = demo_weights(cfg)
+    return cfg, params, bn, harness.compile_eval_detector(cfg, params, bn)
+
+
+class TestEvalRoundTrip:
+    def test_fixture_single_vs_sharded_bit_identical(self, coco_source, small_det):
+        """The acceptance gate at test scale: COCO-fixture mAP through the
+        sharded evaluator is bit-identical to single-host."""
+        _, _, _, det = small_det
+        single = harness.evaluate_detector(det, n_images=4, source=coco_source)
+        twoway = harness.evaluate_detector(det, n_images=4, source=coco_source,
+                                           sharded=2)
+        assert single["n_images"] == 4
+        assert reports_identical(single, twoway)
+
+    def test_n_images_clamps_to_source(self, coco_source, small_det):
+        _, _, _, det = small_det
+        r = harness.evaluate_detector(det, n_images=64, source=coco_source)
+        assert r["n_images"] == 4
+
+
+class TestDetectorCheckpoint:
+    def test_save_restore_round_trip_bit_identical(self, tmp_path, coco_source,
+                                                   small_det):
+        """save_detector_checkpoint → restore_detector_checkpoint →
+        evaluate: the restored handle scores the fixture bit-identically
+        to the original weights (serve --checkpoint's contract)."""
+        cfg, params, bn, det = small_det
+        harness.save_detector_checkpoint(str(tmp_path), 7, params, bn, cfg)
+        cfg2, p2, b2, step = harness.restore_detector_checkpoint(str(tmp_path))
+        assert step == 7 and cfg2 == cfg
+        det2 = harness.compile_eval_detector(cfg2, p2, b2)
+        r1 = harness.evaluate_detector(det, n_images=4, source=coco_source)
+        r2 = harness.evaluate_detector(det2, n_images=4, source=coco_source)
+        assert reports_identical(r1, r2)
+
+    def test_config_json_round_trip(self):
+        cfg = harness.demo_config(conv_exec="gated")
+        assert sy.config_from_dict(sy.config_to_dict(cfg)) == cfg
+        with pytest.raises(ValueError, match="unknown"):
+            sy.config_from_dict({"not_a_field": 1})
+
+    def test_missing_sidecar_is_diagnosable(self, tmp_path, small_det):
+        """A bare train-state checkpoint (no config sidecar) names the
+        problem and the cfg= escape hatch instead of crashing."""
+        from repro.train import checkpoint as ckpt
+
+        cfg, params, bn, _ = small_det
+        ckpt.save(str(tmp_path), 3, {"params": params, "bn": bn, "opt": 0.0})
+        with pytest.raises(FileNotFoundError, match="cfg="):
+            harness.restore_detector_checkpoint(str(tmp_path))
+        # the escape hatch: explicit cfg restores (extra opt leaf ignored)
+        cfg2, p2, _, step = harness.restore_detector_checkpoint(
+            str(tmp_path), cfg=cfg
+        )
+        assert step == 3 and cfg2 == cfg
+        np.testing.assert_array_equal(
+            np.asarray(p2["encode"]["w"]), np.asarray(params["encode"]["w"])
+        )
+
+    def test_mismatched_config_raises_leaf_paths(self, tmp_path, small_det):
+        """Restoring under a different architecture surfaces the
+        checkpoint-lifecycle ValueError (shape or leaf-path mismatch),
+        not a bare KeyError."""
+        cfg, params, bn, _ = small_det
+        harness.save_detector_checkpoint(str(tmp_path), 1, params, bn, cfg)
+        other = dataclasses.replace(cfg, stem_channels=cfg.stem_channels * 2)
+        with pytest.raises(ValueError):
+            harness.restore_detector_checkpoint(str(tmp_path), cfg=other)
