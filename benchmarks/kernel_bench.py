@@ -5,9 +5,16 @@ their jnp oracles, with the accounting the ASIC exposes in hardware:
   * cycle model: taps executed = nnz weights (zero-weight skipping),
   * compressed weight bytes read vs dense (bit-mask format),
   * fused-LIF: membrane potential never round-trips HBM between time steps.
+
+``--fast`` runs only the fused layer-pipeline smoke: full-forward parity of
+the fused conv→tdBN→LIF kernel against the jitted dense oracle (bit-exact,
+exits nonzero on any mismatch) plus the encoding-layer dispatch-count
+assertion — the 8 bit-serial planes must fold into ONE ``pallas_call``.
+CI runs this under ``JAX_PLATFORMS=cpu`` as the kernel-bench gate.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -15,6 +22,55 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
+
+
+def run_fused() -> dict:
+    """Fused layer-pipeline gate at the reduced e2e scale: dense-oracle
+    parity (bit-exact) and the single-dispatch bit-serial encode."""
+    import dataclasses
+
+    from benchmarks.e2e_detector import reduced_config
+    from repro.core import plan as cplan, pruning
+    from repro.kernels import backend
+    from repro.models import snn_yolo as sy
+
+    cfg = reduced_config()
+    params, bn = sy.init_params(jax.random.PRNGKey(0), cfg)
+    params = pruning.prune_tree(params, 0.8)
+    rng = np.random.default_rng(0)
+    h, w_ = cfg.input_hw
+    imgs = jnp.asarray(rng.integers(0, 256, (1, h, w_, 3)) / 255.0, jnp.float32)
+    bn = sy.calibrate_bn_state(params, bn, imgs, cfg)
+
+    heads = {}
+    det = None
+    for ex in ("dense", "pallas"):
+        det = sy.compile_detector(dataclasses.replace(cfg, conv_exec=ex),
+                                  params, bn)
+        _, head = det.detect(imgs)
+        heads[ex] = np.asarray(head)
+    err = float(np.abs(heads["pallas"] - heads["dense"]).max())
+    print(f"fused_pipeline   : err={err:.2e} (pallas vs jitted dense oracle)")
+    assert err == 0.0, f"fused pipeline diverges from dense oracle: {err}"
+
+    # the encoding layer must be ONE dispatch: 8 bit planes folded by conv
+    # linearity into a single fused pallas_call, not 8 serial sweeps
+    pcfg = dataclasses.replace(cfg, conv_exec="pallas")
+    lp = det.plan.layers["encode"]
+    spec = next(s for s in sy.layer_specs(pcfg) if s.name == "encode")
+    x_t = imgs[None]  # (t_in=1, N, H, W, 3)
+
+    def encode_layer(x):
+        return cplan.run_fused(
+            x, lp, pcfg,
+            gamma=params["encode"]["gamma"], beta=params["encode"]["beta"],
+            mean=bn["encode"]["mean"], var=bn["encode"]["var"],
+            v0=None, out_t=spec.t_out)
+
+    n_calls = backend.count_pallas_calls(encode_layer, x_t)
+    print(f"encode dispatches: {n_calls} (8 bit planes, one fused kernel)")
+    assert n_calls == 1, f"bit-serial encode must be 1 dispatch, got {n_calls}"
+    return {"fused_pipeline": {"max_err": err, "encode_dispatches": n_calls}}
 
 
 def run() -> dict:
@@ -72,8 +128,18 @@ def run() -> dict:
     }
     print(f"bitmask_matmul   : err={mm_err:.2e} density={out['bitmask_matmul']['density']:.2f} "
           f"bytes {pw.compressed_bytes}/{int(w2.size*4)}")
+    out.update(run_fused())
     return out
 
 
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="fused-pipeline smoke only (parity + dispatch "
+                    "count) — the CI kernel-bench gate")
+    args = ap.parse_args(argv)
+    return run_fused() if args.fast else run()
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -9,6 +9,7 @@ Throughput metrics per file (direction-normalized so a ratio < 1 is
 always "slower"):
 
 * ``BENCH_e2e.json``   — per-executor 1/wall_s
+* ``BENCH_e2e_96x128.json`` — same metrics at the larger 96×128 input
 * ``BENCH_serve.json`` — per-executor frames_per_s
 * ``BENCH_eval.json``  — 1/wall_s of the whole accuracy pipeline
 
@@ -27,7 +28,8 @@ import json
 import os
 import sys
 
-DEFAULT_FILES = ("BENCH_e2e.json", "BENCH_serve.json", "BENCH_eval.json")
+DEFAULT_FILES = ("BENCH_e2e.json", "BENCH_e2e_96x128.json",
+                 "BENCH_serve.json", "BENCH_eval.json")
 
 
 def _throughputs(name: str, data: dict, min_seconds: float) -> tuple:
@@ -36,7 +38,7 @@ def _throughputs(name: str, data: dict, min_seconds: float) -> tuple:
     (a ms-scale sample swings far more than any threshold even on one
     machine) and returned separately as skipped."""
     out, skipped = {}, []
-    if name == "BENCH_e2e.json":
+    if name.startswith("BENCH_e2e"):  # BENCH_e2e.json + BENCH_e2e_<HxW>.json
         for ex, r in data.get("executors", {}).items():
             if r.get("wall_s"):
                 if r["wall_s"] < min_seconds:

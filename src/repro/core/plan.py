@@ -37,6 +37,7 @@ from . import bitserial
 from . import block_conv as bc
 from . import pruning, quant
 from . import spike_conv as sc
+from repro.kernels import autotune
 from repro.kernels import ops as kops
 
 
@@ -49,6 +50,9 @@ class CompressedLayerPlan(NamedTuple):
     w_q: jax.Array  # (kh, kw, cin, kout) int8 dense — gated/dense reference
     in_bits: int  # 1 = binary spikes, 8 = multibit input (bit-serial)
     nnz: int  # true nonzero count (accumulate accounting)
+    # dispatch tiling for the fused pipeline kernel — autotuned per layer
+    # shape (kernels/autotune.py); NEVER affects numerics, only wall-clock
+    tile: autotune.TileConfig = autotune.DEFAULT_TILE
 
     @property
     def dense_bytes(self) -> int:
@@ -83,13 +87,19 @@ def build_layer_plan(
     weight_bits: int = 8,
     in_bits: int = 1,
     vpad: int | None = None,
+    tile: autotune.TileConfig | None = None,
 ) -> CompressedLayerPlan:
     """Quantize + bitmask-pack one HWIO kernel tensor. Must run outside jit
     (packing is host-side numpy). Raises if any K-block's nnz would overflow
-    the packed-value buffer (the kernel cannot bounds-check its gather)."""
+    the packed-value buffer (the kernel cannot bounds-check its gather).
+
+    ``tile`` (autotuned dispatch shape) overrides ``kblk`` — the packed
+    K-block width is itself a tuning knob; any choice is bit-exact."""
     qw = quant.quantize(w, bits=weight_bits)
     w_q = np.asarray(qw.q).reshape(w.shape)
     kout = w.shape[-1]
+    if tile is not None:
+        kblk = tile.kblk
     kblk_l = min(kblk, -(-kout // 8) * 8)  # small layers: one tight K-block
     # pack_conv_weights itself raises on vpad overflow; validate_packed
     # stays available for externally-constructed PackedConvWeights
@@ -101,7 +111,18 @@ def build_layer_plan(
         w_q=jnp.asarray(w_q),
         in_bits=in_bits,
         nnz=int(np.count_nonzero(w_q)),
+        tile=tile or autotune.TileConfig(kblk=kblk_l, nbt=autotune.DEFAULT_TILE.nbt),
     )
+
+
+def _layer_shapes_for(cfg) -> dict:
+    """Per-layer :class:`~repro.kernels.autotune.LayerShape` map for the
+    autotune-cache lookup. Falls back to {} for configs the topology walk
+    does not understand — those layers just run at DEFAULT_TILE."""
+    try:
+        return autotune.detector_layer_shapes(cfg)
+    except Exception:
+        return {}
 
 
 def build_plan(
@@ -110,6 +131,7 @@ def build_plan(
     *,
     kblk: int = 128,
     prune_rate: float | None = None,
+    tile_cache: dict | None = None,
 ) -> DetectorPlan:
     """Compile the whole detector parameter tree in one pass.
 
@@ -118,6 +140,11 @@ def build_plan(
     spatial (3×3) kernels first — pass the SAME pruned tree to the dense
     oracle when checking parity. The encoding layer is marked 8-bit input
     (RGB); every other layer consumes binary spikes.
+
+    ``tile_cache``: shape→TileConfig entries for the fused kernel's
+    dispatch tiling. ``None`` consults the persisted autotune cache
+    (``kernels/autotune.py``; missing/stale caches fall back to default
+    tilings); pass ``{}`` to force defaults. Tiling never changes numerics.
     """
     if not cfg.weight_bits:
         # the compressed path is FXP-int8 by construction; quantizing a
@@ -126,17 +153,21 @@ def build_plan(
             "build_plan requires quantized weights (cfg.weight_bits > 0); "
             "weight_bits=0 means float weights, which only conv_exec='dense' runs"
         )
+    shapes = _layer_shapes_for(cfg)
     layers = {}
     for name, layer_p in params.items():
         w = layer_p["w"]
         if prune_rate is not None and pruning.is_spatial_kernel(w):
             w = pruning.prune_by_rate(w, prune_rate)
+        shape = shapes.get(name)
+        tile = autotune.lookup(shape, tile_cache) if shape is not None else None
         layers[name] = build_layer_plan(
             name,
             w,
             kblk=kblk,
             weight_bits=cfg.weight_bits,
             in_bits=8 if name == "encode" else 1,
+            tile=tile,
         )
     return DetectorPlan(layers=layers, block_hw=tuple(cfg.block_hw))
 
@@ -212,20 +243,60 @@ def _exec_dense(x_t: jax.Array, lp: CompressedLayerPlan, cfg) -> jax.Array:
     return _unfold_t(y * out_scale, tn)
 
 
-def _blocked_gated(x: jax.Array, w: jax.Array, bh: int, bw: int) -> jax.Array:
-    """Shift-accumulate gated one-to-all with block-conv border semantics:
-    replicate-pad each independent block, SAME-conv it, crop the center."""
-    kh = w.shape[0]
+def _blocked_gated(
+    x: jax.Array,
+    w: jax.Array,
+    bh: int,
+    bw: int,
+    tap_alive: tuple | None = None,
+) -> jax.Array:
+    """Shift-accumulate gated one-to-all over independent replicate-padded
+    blocks. Each live tap slices its aligned window straight out of the
+    padded block and contracts input channels with one matmul — the same
+    one-to-all broadcast as :func:`spike_conv.gated_one_to_all`, minus the
+    zero-fill scatter per tap and the SAME-conv-then-crop waste (only the
+    bh×bw interior is ever computed). ``tap_alive`` (pack-time liveness)
+    skips fully-pruned taps at trace time. Integer-valued f32 accumulation
+    is order-independent, so all of this is bit-exact with the literal
+    shift-accumulate reference."""
+    kh, kw = int(w.shape[0]), int(w.shape[1])
+    if kh == 1 and kw == 1:
+        # pointwise conv sees no block borders — skip the block round-trip
+        # (two transposes) and contract channels in place
+        return x @ w[0, 0].astype(jnp.float32)
+    taps = tuple(range(kh * kw)) if tap_alive is None else tap_alive
+    if len(taps) == kh * kw:
+        # every gate open — the one-to-all visit order degenerates to the
+        # full tap set, which is exactly the dense blocked conv (same
+        # integer-exact accumulation, no im2col copy)
+        return bc.block_conv2d(x, w.astype(jnp.float32), block_h=bh, block_w=bw)
     pad = (kh - 1) // 2
     xb = bc.to_blocks(x, bh, bw)
     n, nbh, nbw, _, _, c = xb.shape
     flat = xb.reshape(n * nbh * nbw, bh, bw, c)
     if pad:
         flat = jnp.pad(flat, ((0, 0), (pad, pad), (pad, pad), (0, 0)), mode="edge")
-    out = sc.gated_one_to_all(flat, w)
-    if pad:
-        out = out[:, pad:-pad, pad:-pad, :]
-    out = out.reshape(n, nbh, nbw, bh, bw, out.shape[-1])
+    m = flat.shape[0]
+    kout = w.shape[-1]
+    if not taps:  # fully-pruned layer: all taps gated off
+        out = jnp.zeros((m, bh, bw, kout), jnp.float32)
+    else:
+        # all live taps in ONE contraction: stack each tap's window along a
+        # new axis (im2col over live taps only) and contract (live·cin) at
+        # once — integer-valued f32 partial sums stay exact (|acc| bounded
+        # by live·cin·127 « 2^24), so the single dot is bit-identical to
+        # the tap-by-tap shift-accumulate
+        wins = [
+            jax.lax.slice(flat, (0, t // kw, t % kw, 0),
+                          (m, t // kw + bh, t % kw + bw, c))
+            for t in taps
+        ]
+        patches = jnp.stack(wins, axis=-2)  # (m, bh, bw, live, cin)
+        s2 = patches.reshape(m * bh * bw, len(taps) * c)
+        w2 = jnp.stack([w[t // kw, t % kw] for t in taps])
+        w2 = w2.reshape(len(taps) * c, kout).astype(jnp.float32)
+        out = (s2 @ w2).reshape(m, bh, bw, kout)
+    out = out.reshape(n, nbh, nbw, bh, bw, kout)
     return bc.from_blocks(out)
 
 
@@ -235,29 +306,127 @@ def _exec_gated(x_t: jax.Array, lp: CompressedLayerPlan, cfg) -> jax.Array:
 
     Accumulates the int8 weights as integer-valued f32 (exact) and scales
     the final integer once — see :func:`_exec_dense` for why this makes
-    every executor bit-identical."""
+    every executor bit-identical.
+
+    The 8-bit encoding layer folds its bit-serial planes by conv linearity
+    — conv(Σ_b 2^b·plane_b, w) = Σ_b 2^b·conv(plane_b, w) — into ONE gated
+    pass over the integer-valued maps, exactly as the fused Pallas kernel
+    does. :func:`repro.core.bitserial.bitserial_conv` remains the literal
+    plane-serial reference and the two are asserted equal in tests; the
+    accumulate accounting (nnz × bits_in) is analytic and unchanged."""
     w_int = lp.w_q.astype(jnp.float32)
     bh, bw = cfg.block_hw
+    alive = tuple(lp.packed.tap_alive)
     x, tn = _fold_t(x_t)
     if lp.in_bits == 8:
-        xq = _quantize_input_u8(x)
-        y = bitserial.bitserial_conv(
-            xq, w_int, lambda p, wt: _blocked_gated(p, wt, bh, bw)
-        )
-        y = y * (lp.scale / 255.0)
+        x = _quantize_input_u8(x).astype(jnp.float32)
+        y = _blocked_gated(x, w_int, bh, bw, alive) * (lp.scale / 255.0)
     else:
-        y = _blocked_gated(x, w_int, bh, bw) * lp.scale
+        y = _blocked_gated(x, w_int, bh, bw, alive) * lp.scale
     return _unfold_t(y, tn)
+
+
+def precompute_affines(plan: DetectorPlan, params, bn_state, cfg) -> dict:
+    """Affine parameter bundles for every fused-eligible layer, built ONCE.
+
+    The bundle (FXP scale / tdBN mean / rsqrt(var+eps) / gamma / beta, laid
+    out per K-block — see :func:`repro.kernels.ops.affine_bundle`) depends
+    only on the weights and calibrated BN statistics, never on the frames.
+    Rebuilding it inside the per-frame step costs a dozen small XLA ops per
+    layer that cannot fuse into the pallas_call consuming them; a compile-
+    once detector hoists the whole set here instead and threads the result
+    through ``forward(..., affines=...)``. Callers own staleness: the
+    bundles describe THESE params/bn_state (CompiledDetector fingerprints
+    the inputs and refuses on a swap)."""
+    out = {}
+    for name, lp in plan.layers.items():
+        p = params.get(name)
+        st = (bn_state or {}).get(name)
+        if p is None or st is None or "gamma" not in p:
+            continue
+        scale_eff = lp.scale / 255.0 if lp.in_bits == 8 else lp.scale
+        out[name] = kops.affine_bundle(
+            lp.packed, scale_eff, st["mean"], st["var"], p["gamma"], p["beta"]
+        )
+    return out
+
+
+def run_fused(
+    x_t: jax.Array,
+    lp: CompressedLayerPlan,
+    cfg,
+    *,
+    gamma: jax.Array,
+    beta: jax.Array,
+    mean: jax.Array,
+    var: jax.Array,
+    v0: jax.Array | None,
+    out_t: int,
+    affine: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """The whole per-layer pipeline — conv → FXP rescale → tdBN inference
+    affine → LIF over ``out_t`` steps — in ONE fused Pallas dispatch
+    (kernels/fused_pipeline.py), membrane resident in VMEM across T.
+
+    Returns (spikes (out_t, N, H, W, C) f32 {0,1}, final membrane
+    (N, H, W, C) f32) — drop-in for the unfused conv → ``tdbn_apply``
+    (training=False) → ``lif_over_time`` chain, BIT-IDENTICAL to it (same
+    float ops in the same order; integer conv accumulation is
+    order-independent).
+
+    The 8-bit encoding layer folds its bit-serial planes into the u8 pixel
+    values (Σ_b 2^b·conv(plane_b) = conv(u8), exact in f32), so encode is
+    one dispatch too. Dispatch tiling comes from ``lp.tile`` (autotuned).
+
+    ``affine``: optional precomputed parameter bundle (see
+    :func:`precompute_affines`) — compile-once callers hoist the per-layer
+    bundle build out of the frame loop; when None it is built inline from
+    the gamma/beta/mean/var arguments (identical values either way)."""
+    bh, bw = cfg.block_hw
+    interpret = getattr(cfg, "kernel_interpret", None)
+    if lp.in_bits == 8:
+        # u8-grid values = the exact fold of the 8 bit-serial planes
+        x = _quantize_input_u8(x_t).astype(jnp.float32)
+        scale_eff = lp.scale / 255.0
+    else:
+        x = x_t
+        scale_eff = lp.scale
+    if affine is None:
+        affine = kops.affine_bundle(lp.packed, scale_eff, mean, var, gamma, beta)
+    return kops.fused_conv_bn_lif(
+        x,
+        lp.packed,
+        affine,
+        v0=v0,
+        out_t=out_t,
+        in_bits=lp.in_bits,
+        bn_scale=1.0 * cfg.threshold,  # tdbn_apply's alpha(=1)·threshold
+        threshold=cfg.threshold,
+        leak=cfg.leak,
+        bh=bh,
+        bw=bw,
+        nbt=lp.tile.nbt,
+        interpret=interpret,
+    )
 
 
 @register_conv_executor("pallas")
 def _exec_pallas(x_t: jax.Array, lp: CompressedLayerPlan, cfg) -> jax.Array:
     """Compressed Pallas kernel. T (and bit-serial planes for the 8-bit
     encoding layer) fold into the kernel's spatial-block grid, so the whole
-    (T·N·blocks) volume is ONE pallas_call."""
+    (T·N·blocks) volume is ONE pallas_call.
+
+    Pointwise (1×1) spike layers — the detection head — bypass the kernel:
+    with no spatial taps to gate and no halo, the blocked dispatch is pure
+    layout overhead around a single channel contraction, so the executor
+    contracts in place (integer-valued f32 matmul — bit-identical to the
+    kernel's accumulation, which the conformance suite asserts)."""
     bh, bw = cfg.block_hw
     interpret = getattr(cfg, "kernel_interpret", None)
     x, tn = _fold_t(x_t)
+    if lp.in_bits != 8 and lp.w_q.shape[0] == 1 and lp.w_q.shape[1] == 1:
+        y = (x @ lp.w_q[0, 0].astype(jnp.float32)) * lp.scale
+        return _unfold_t(y, tn)
     if lp.in_bits == 8:
         planes = bitserial.to_bitplanes(_quantize_input_u8(x))  # (8, TN, H, W, C)
         bits, m = planes.shape[0], planes.shape[1]

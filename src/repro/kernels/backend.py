@@ -12,3 +12,31 @@ def auto_interpret(interpret: bool | None = None) -> bool:
     if interpret is None:
         return jax.default_backend() != "tpu"
     return interpret
+
+
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` equations in ``fn``'s jaxpr (recursing into
+    nested sub-jaxprs: pjit, scan, cond bodies). This is the DISPATCH COUNT
+    of one traced execution — the verifiable form of "bit-serial encode
+    executes as one dispatch" that kernel_bench and the conformance suite
+    assert, independent of wall-clock noise."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+
+    def walk(jp) -> int:
+        n = 0
+        for eqn in jp.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for key in ("jaxpr", "call_jaxpr", "cond_jaxpr", "body_jaxpr",
+                        "branches"):
+                sub = eqn.params.get(key)
+                if sub is None:
+                    continue
+                subs = sub if isinstance(sub, (tuple, list)) else [sub]
+                for s in subs:
+                    inner = getattr(s, "jaxpr", s)
+                    if hasattr(inner, "eqns"):
+                        n += walk(inner)
+        return n
+
+    return walk(closed.jaxpr)

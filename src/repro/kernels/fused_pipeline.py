@@ -1,0 +1,338 @@
+"""Fused layer-pipeline Pallas kernel (the whole per-layer dataflow in one
+dispatch): gated one-to-all conv → FXP rescale → tdBN (inference affine) →
+LIF spike/reset, for ALL T time steps, with the membrane accumulator
+resident in VMEM scratch across the T loop.
+
+Why fusion is the paper's real speedup
+--------------------------------------
+The ASIC never materializes per-time-step activations off-chip: spikes flow
+PE→PE and the membrane potential lives in PE registers for the whole T loop.
+The unfused executor pipeline pays exactly that cost in software — every
+layer round-trips (T, N, H, W, C) activations and LIF membranes through HBM
+between a conv `pallas_call`, an XLA tdBN, and an XLA LIF scan. This kernel
+collapses the full per-layer pipeline into ONE `pallas_call`:
+
+    for t in range(T):                      # static unrolled, T ≤ 4
+        acc   = Σ_tap spikes_t ⋆ W[tap]     # int MXU dots, per-tap skip
+        y     = acc * fxp_scale             # FXP8 dequant (once, exact)
+        y     = c·((y − μ)·rsqrt(σ²+ε))·γ+β # tdBN inference affine
+        v     = v·leak + y                  # LIF — v NEVER leaves VMEM
+        s_t   = v ≥ θ ; v *= (1 − s_t)      # spike + hard reset
+
+Bit-exactness contract: every float op above is the SAME op in the SAME
+order as the unfused `core.plan` → `core.lif.tdbn_apply` → `core.lif.
+lif_over_time` pipeline (integer conv accumulation is order-independent;
+the affine/LIF chain is element-wise), so fused output is BIT-IDENTICAL to
+the dense oracle — tests/conformance/ asserts it against the goldens.
+
+Mixed time steps: a layer with in_T=1, out_T=T (the paper's §II-A mixed
+schedule, e.g. conv_block) computes the conv ONCE and reuses the rescaled+
+normalized drive for every LIF step — the membrane loop is the only per-T
+work.
+
+Bit-serial encode in one dispatch: the 8-bit encoding layer folds its 8 bit
+planes *into the input values* — Σ_b 2^b·conv(plane_b, W) = conv(Σ_b 2^b·
+plane_b, W) = conv(u8, W) by linearity over exact integers — so encode is
+ONE dispatch of this same kernel (in_bits=8 switches the dot to f32, exact
+for |acc| < 2^24). This is the TPU-native form of the paper's §III-C.2
+bit-serial support: same datapath for both layer types, B folded above the
+channel loop. `benchmarks/kernel_bench.py` asserts the single-dispatch
+property by counting pallas_call equations in the trace and checks parity
+against the literal 8-plane bit-serial reference.
+
+Grid/tiling: grid = (K-blocks, spatial-block groups) — K outer, spatial
+inner, the paper's KTBC order, so compressed weights are decoded once per
+K-block and reused across every spatial tile and time step. `nbt` spatial
+blocks are processed per grid step (stacked into one MXU dot); `nbt` and
+the K-block width are the per-layer-shape autotuning knobs swept by
+`kernels/autotune.py`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .backend import auto_interpret
+
+# rows of the per-K-block affine parameter bundle (see _affine_bundle in
+# ops.py): FXP scale, tdBN mean, rsqrt(var+eps), gamma, beta
+AFFINE_ROWS = 5
+
+
+def _rounded(x: jax.Array) -> jax.Array:
+    """Mark ``x`` as a value whose rounded f32 bit pattern the reference
+    chain materializes (a product that feeds an add/sub).
+
+    Inside one fused computation XLA/LLVM contracts ``a*b + c`` into an FMA
+    (single rounding). On the CPU backend this happens at codegen, below
+    HLO, and is measured to survive EVERY in-graph barrier — a bitcast
+    round-trip, even ``optimization_barrier`` — so this marker cannot (and
+    does not need to) pin eager per-op rounding. What keeps the executors
+    bit-identical is that the production dense/gated references are jitted
+    graphs of the same ops, so XLA contracts them the same way; the
+    conformance suite asserts that end-to-end parity at 0.0. The bitcast
+    round-trip is kept because on an actual TPU lowering (Mosaic, not
+    interpret mode) the integer view does force materialization, keeping
+    the kernel's rounding aligned with its jitted references there too."""
+    return jax.lax.bitcast_convert_type(
+        jax.lax.bitcast_convert_type(x, jnp.int32), jnp.float32
+    )
+
+
+def _kernel(
+    spikes_ref,  # VMEM (t_in, nbt, BH+2p, BW+2p, C) int8 (f32 for in_bits=8)
+    *refs,  # packed mode: maskp, vals, affine, v0, spk, mem, wdense scratch
+    #         predecoded mode: wdense, affine, v0, spk, mem (no scratch)
+    taps: int,
+    kh: int,
+    kw: int,
+    bh: int,
+    bw: int,
+    nbt: int,
+    t_in: int,
+    t_out: int,
+    in_bits: int,
+    tap_alive: tuple,  # taps with any nonzero weight (static, pack-time)
+    bn_scale: float,  # alpha * threshold (tdBN), a trace-time constant
+    threshold: float,
+    leak: float,
+    predecode: bool,
+    conv_body: bool,  # interpret mode: one lax.conv instead of im2col ops
+):
+    if predecode:
+        # decoder stage already ran (static weights decode once, at plan/
+        # trace time — see fused_conv_bn_lif); the kernel consumes the
+        # VMEM-resident dense K-block directly
+        wdense_ref, affine_ref, v0_ref, spk_ref, mem_ref = refs
+    else:
+        maskp_ref, vals_ref, affine_ref, v0_ref, spk_ref, mem_ref, wdense_ref = refs
+        nbg = pl.program_id(1)  # spatial group index (innermost)
+
+        # ---- decode compressed weights once per K-block (paper: weights
+        # stay resident on-chip, reused across tiles and time steps) ----
+        @pl.when(nbg == 0)
+        def _decode():
+            words = maskp_ref[0]  # (taps, C//8, KBLK) uint8
+            c8 = words.shape[1]
+            kblk = words.shape[2]
+            expanded = jnp.repeat(words, 8, axis=1)  # (taps, C, KBLK)
+            shifts = (
+                jax.lax.broadcasted_iota(jnp.int32, (taps, c8 * 8, kblk), 1) % 8
+            ).astype(jnp.uint8)
+            bits = ((expanded >> shifts) & 1).astype(jnp.int32)
+            flat = bits.reshape(-1)
+            idx = jnp.cumsum(flat) - 1  # position into packed values
+            vals = vals_ref[0]
+            gathered = jnp.take(vals, jnp.clip(idx, 0, vals.shape[0] - 1), axis=0)
+            dense = jnp.where(flat > 0, gathered.astype(jnp.int32), 0)
+            wdense_ref[...] = dense.reshape(taps, c8 * 8, kblk).astype(jnp.int8)
+
+    kblk = wdense_ref.shape[-1]
+    m = nbt * bh * bw
+    acc_dtype = jnp.float32 if in_bits == 8 else jnp.int32
+
+    # ---- conv: ONE (t_in·m, live·C)×(live·C, KBLK) MXU dot covering every
+    # live tap and every input time step. The per-block im2col stacks the
+    # live taps' shifted windows along a patch axis; dead taps (every weight
+    # pruned — common for the 80%-pruned 3×3 kernels) are dropped from BOTH
+    # the patch matrix and the weight rows at TRACE time via ``tap_alive``
+    # (liveness is a pack-time property, so no runtime cond). Integer
+    # accumulation is order-independent, so folding the tap loop into the
+    # dot's reduction axis is bit-exact with any per-tap summation. ----
+    spk_all = spikes_ref[...]  # one ref read; taps slice the value
+    # predecoded input carries a leading (1,) K-block axis; scratch doesn't
+    wall = wdense_ref[0] if predecode else wdense_ref[...]
+    cin = spk_all.shape[-1]
+    if not tap_alive:
+        acc = jnp.zeros((t_in * m, kblk), acc_dtype)
+    elif conv_body:
+        # interpret mode runs the kernel body as XLA ops on CPU, where one
+        # native VALID conv beats the hand im2col (9 slices + stack + dot)
+        # by a wide margin. Zero (pruned) taps contribute exact zeros, and
+        # integer-valued f32 accumulation is order-independent, so this is
+        # bit-identical to the tap-sliced MXU dot used on hardware.
+        if kh == 1 and kw == 1:
+            # pointwise: no halo (ph == bh), the conv IS one channel dot —
+            # skip the conv op's window machinery entirely
+            acc = jax.lax.dot_general(
+                spk_all.reshape(t_in * m, cin).astype(jnp.float32),
+                wall.reshape(cin, kblk).astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            x = spk_all.reshape(t_in * nbt, spk_all.shape[2], spk_all.shape[3], cin)
+            acc = jax.lax.conv_general_dilated(
+                x.astype(jnp.float32),
+                wall.reshape(kh, kw, cin, kblk).astype(jnp.float32),
+                window_strides=(1, 1),
+                padding="VALID",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            ).reshape(t_in * m, kblk)
+    else:
+        wins = [
+            jax.lax.slice(
+                spk_all,
+                (0, 0, tap // kw, tap % kw, 0),
+                (t_in, nbt, tap // kw + bh, tap % kw + bw, cin),
+            )
+            for tap in tap_alive
+        ]
+        # (t_in, nbt, bh, bw, live, C) → rows ordered exactly like the
+        # membrane/output layout, cols ordered [tap, c] like wdense rows
+        patches = jnp.stack(wins, axis=-2)
+        s = patches.reshape(t_in * m, len(tap_alive) * cin)
+        w = wall if len(tap_alive) == taps else jnp.stack([wall[t] for t in tap_alive])
+        w = w.reshape(len(tap_alive) * cin, kblk)
+        if in_bits == 8:
+            # multibit u8 input: f32 MXU dot — exact while live·C·255·127
+            # < 2^24 (the u8 encode layer has C≤8, far inside the bound)
+            acc = jax.lax.dot_general(
+                s,
+                w.astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            acc = jax.lax.dot_general(
+                s,
+                w,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+
+    scale = affine_ref[0, 0]  # (KBLK,) — FXP scale (scalar, row-broadcast)
+    mean = affine_ref[0, 1]
+    rinv = affine_ref[0, 2]  # rsqrt(var + eps), precomputed (deterministic)
+    gamma = affine_ref[0, 3]
+    beta = affine_ref[0, 4]
+
+    # FXP rescale then the tdBN inference affine — op-for-op the unfused
+    # core.plan executor + core.lif.tdbn_apply(training=False); element-wise,
+    # so applying it to the stacked (t_in·m, KBLK) drive is bit-identical.
+    # _rounded pins every product that feeds an add/sub — see its docstring:
+    # without it XLA contracts mul+add into FMAs, a silent 1-ulp drift that
+    # can flip spikes sitting exactly at threshold.
+    y_all = _rounded(acc.astype(jnp.float32) * scale)
+    x_hat = _rounded((y_all - mean) * rinv)
+    drives = (_rounded((bn_scale * x_hat) * gamma) + beta).reshape(t_in, m, kblk)
+
+    v = v0_ref[...].reshape(m, kblk)
+    for t in range(t_out):  # T ≤ 4: unrolled, v stays in VREGs/VMEM
+        # mixed time steps (in_T=1 → out_T=T): one conv drive, T LIF steps
+        y = drives[0] if t_in == 1 else drives[t]
+        v = _rounded(v * leak) + y
+        spiked = v >= threshold
+        spk_ref[t] = spiked.reshape(nbt, bh, bw, kblk).astype(jnp.int8)
+        # hard reset: where(s, 0, v) ≡ v·(1−s) for s ∈ {0,1} (no arithmetic
+        # → no rounding, so no _rounded barrier needed; ±0.0 both propagate
+        # as exact zero through v·leak + y)
+        v = jnp.where(spiked, 0.0, v)
+    mem_ref[...] = v.reshape(nbt, bh, bw, kblk)
+
+
+def fused_pipeline_pallas(
+    spike_blocks: jax.Array,  # (t_in, NB, BH+2p, BW+2p, C) int8 (f32 if in_bits=8)
+    maskp: jax.Array | None,  # (KB, taps, C//8, KBLK) uint8 (packed mode)
+    vals: jax.Array | None,  # (KB, VPAD) int8 (packed mode)
+    affine: jax.Array,  # (KB, AFFINE_ROWS, KBLK) f32
+    v0_blocks: jax.Array,  # (NB, BH, BW, KB*KBLK) f32
+    *,
+    kh: int,
+    kw: int,
+    bh: int,
+    bw: int,
+    kblk: int,
+    nbt: int,
+    t_out: int,
+    in_bits: int,
+    tap_alive: tuple,
+    bn_scale: float,
+    threshold: float,
+    leak: float,
+    wdense: jax.Array | None = None,  # (KB, taps, C, KBLK) int8 (predecoded)
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One fused dispatch for a whole layer. Returns
+    (spikes (t_out, NB, BH, BW, KB*KBLK) int8, membrane (NB, BH, BW, KB*KBLK) f32).
+
+    Weights arrive either compressed (``maskp``/``vals`` — the kernel runs
+    the bitmask decoder once per K-block, the paper's on-chip decode) or
+    predecoded (``wdense`` — the decoder stage ran ahead of the kernel; for
+    static inference weights it then runs once per COMPILE, not per frame).
+    Both modes compute bit-identically.
+
+    ``nbt`` spatial blocks are processed per grid step (must divide NB —
+    callers pad). Grid order is K-blocks outer / spatial groups inner so the
+    decoded weight block is reused across every spatial tile and time step.
+    """
+    interpret = auto_interpret(interpret)
+    predecode = wdense is not None
+    t_in, nb_total, ph, pw, cin = spike_blocks.shape
+    if predecode:
+        kb_total, taps, cin_, kblk_ = wdense.shape
+        assert cin_ == cin, (cin_, cin)
+    else:
+        kb_total, taps, c8, kblk_ = maskp.shape
+        assert c8 * 8 == cin
+    assert kblk_ == kblk and taps == kh * kw
+    assert ph == bh + kh - 1 and pw == bw + kw - 1
+    assert nb_total % nbt == 0, (nb_total, nbt)
+    assert t_in == t_out or t_in == 1, (t_in, t_out)
+    assert affine.shape == (kb_total, AFFINE_ROWS, kblk)
+
+    if predecode:
+        w_specs = [pl.BlockSpec((1, taps, cin, kblk), lambda kb, nb: (kb, 0, 0, 0))]
+        w_inputs = (wdense,)
+        scratch = []
+    else:
+        w_specs = [
+            pl.BlockSpec((1, taps, cin // 8, kblk), lambda kb, nb: (kb, 0, 0, 0)),
+            pl.BlockSpec((1, vals.shape[1]), lambda kb, nb: (kb, 0)),
+        ]
+        w_inputs = (maskp, vals)
+        scratch = [pltpu.VMEM((taps, cin, kblk), jnp.int8)]
+
+    grid = (kb_total, nb_total // nbt)  # K outer, spatial inner → KTBC order
+    spk, mem = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            taps=taps,
+            kh=kh,
+            kw=kw,
+            bh=bh,
+            bw=bw,
+            nbt=nbt,
+            t_in=t_in,
+            t_out=t_out,
+            in_bits=in_bits,
+            tap_alive=tuple(tap_alive),
+            bn_scale=bn_scale,
+            threshold=threshold,
+            leak=leak,
+            predecode=predecode,
+            conv_body=bool(interpret),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t_in, nbt, ph, pw, cin), lambda kb, nb: (0, nb, 0, 0, 0)),
+            *w_specs,
+            pl.BlockSpec((1, AFFINE_ROWS, kblk), lambda kb, nb: (kb, 0, 0)),
+            pl.BlockSpec((nbt, bh, bw, kblk), lambda kb, nb: (nb, 0, 0, kb)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t_out, nbt, bh, bw, kblk), lambda kb, nb: (0, nb, 0, 0, kb)),
+            pl.BlockSpec((nbt, bh, bw, kblk), lambda kb, nb: (nb, 0, 0, kb)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t_out, nb_total, bh, bw, kb_total * kblk), jnp.int8),
+            jax.ShapeDtypeStruct((nb_total, bh, bw, kb_total * kblk), jnp.float32),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(spike_blocks, *w_inputs, affine, v0_blocks)
+    return spk, mem

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import fused_pipeline as fp
 from . import gated_one_to_all as g2a
 from . import spike_lif as sl
 from . import bitmask_matmul as bmm
@@ -33,6 +34,10 @@ class PackedConvWeights(NamedTuple):
     cin: int  # padded input channels
     kout: int  # true output channels
     kblk: int
+    # taps with ANY nonzero weight across ALL K-blocks, as a static tuple —
+    # known at pack time, so the fused kernel skips dead taps at TRACE time
+    # (no per-tap runtime cond; a pruned 3×3 often kills whole taps)
+    tap_alive: tuple = ()
 
     @property
     def compressed_bytes(self) -> int:
@@ -94,6 +99,7 @@ def pack_conv_weights(
         cin=cin_p,
         kout=k,
         kblk=kblk,
+        tap_alive=tuple(int(t) for t in np.flatnonzero(tap_any.any(axis=0))),
     )
 
 
@@ -213,6 +219,239 @@ def gated_conv(
         kblk=pw.kblk,
         bh=bh,
         bw=bw,
+        out_h=h,
+        out_w=w,
+        batch=n,
+        kout=pw.kout,
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused layer pipeline: conv → FXP rescale → tdBN affine → LIF, one dispatch
+# ---------------------------------------------------------------------------
+
+
+def _block_layout_nohalo(x: jax.Array, *, bh: int, bw: int, cpad: int) -> jax.Array:
+    """NHWC f32 → (N*nbh*nbw, bh, bw, Cp) independent blocks, channel-padded
+    (the membrane layout — no conv halo)."""
+    n, h, w, c = x.shape
+    if c < cpad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cpad - c)))
+    x = x.reshape(n, h // bh, bh, w // bw, bw, cpad).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(-1, bh, bw, cpad)
+
+
+def _unblock(xb: jax.Array, *, n: int, h: int, w: int) -> jax.Array:
+    """(N*nbh*nbw, bh, bw, C) blocks → NHWC (leading axes preserved)."""
+    bh, bw = xb.shape[-3], xb.shape[-2]
+    lead = xb.shape[:-4]
+    xb = xb.reshape(lead + (n, h // bh, w // bw, bh, bw, xb.shape[-1]))
+    perm = tuple(range(len(lead))) + tuple(
+        len(lead) + i for i in (0, 1, 3, 2, 4, 5)
+    )
+    xb = xb.transpose(perm)
+    return xb.reshape(lead + (n, h, w, xb.shape[-1]))
+
+
+def affine_bundle(
+    pw: PackedConvWeights,
+    scale: jax.Array,  # () f32 — FXP dequant scale (per-tensor)
+    mean: jax.Array,  # (C,) f32 — tdBN running mean
+    var: jax.Array,  # (C,) f32 — tdBN running var
+    gamma: jax.Array,
+    beta: jax.Array,
+    *,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """Pack the per-channel pipeline constants into the kernel's
+    (KB, 5, KBLK) bundle: [FXP scale, mean, rsqrt(var+eps), gamma, beta].
+
+    ``rsqrt(var+eps)`` is precomputed here — it is a deterministic
+    element-wise function, so the kernel multiplying by it is bit-identical
+    to ``tdbn_apply`` computing it inline. Channels padded past the true
+    layer width get (mean 0, var 1, gamma 0, beta 0): their outputs are
+    garbage-free zeros and are stripped by the caller anyway."""
+    kb_total = pw.maskp.shape[0]
+    kblk = pw.kblk
+    kp = kb_total * kblk
+    kout = mean.shape[0]
+
+    def padc(v, fill):
+        return jnp.concatenate([v, jnp.full((kp - kout,), fill, v.dtype)]) if kp > kout else v
+
+    rinv = jax.lax.rsqrt(var + eps)
+    rows = jnp.stack(
+        [
+            jnp.broadcast_to(scale.astype(jnp.float32), (kp,)),
+            padc(mean.astype(jnp.float32), 0.0),
+            padc(rinv.astype(jnp.float32), 1.0),
+            padc(gamma.astype(jnp.float32), 0.0),
+            padc(beta.astype(jnp.float32), 0.0),
+        ]
+    )  # (5, KP)
+    return rows.reshape(fp.AFFINE_ROWS, kb_total, kblk).transpose(1, 0, 2)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "kh",
+        "kw",
+        "kblk",
+        "bh",
+        "bw",
+        "nbt",
+        "t_out",
+        "in_bits",
+        "tap_alive",
+        "bn_scale",
+        "threshold",
+        "leak",
+        "out_h",
+        "out_w",
+        "batch",
+        "kout",
+        "interpret",
+    ),
+)
+def _dispatch_fused(
+    spike_blocks,
+    maskp,
+    vals,
+    affine,
+    v0_blocks,
+    wdense,
+    *,
+    kh,
+    kw,
+    kblk,
+    bh,
+    bw,
+    nbt,
+    t_out,
+    in_bits,
+    tap_alive,
+    bn_scale,
+    threshold,
+    leak,
+    out_h,
+    out_w,
+    batch,
+    kout,
+    interpret,
+):
+    spk, mem = fp.fused_pipeline_pallas(
+        spike_blocks,
+        maskp,
+        vals,
+        affine,
+        v0_blocks,
+        kh=kh,
+        kw=kw,
+        bh=bh,
+        bw=bw,
+        kblk=kblk,
+        nbt=nbt,
+        t_out=t_out,
+        in_bits=in_bits,
+        tap_alive=tap_alive,
+        bn_scale=bn_scale,
+        threshold=threshold,
+        leak=leak,
+        wdense=wdense,
+        interpret=interpret,
+    )
+    nb = batch * (out_h // bh) * (out_w // bw)
+    spk = _unblock(spk[:, :nb].astype(jnp.float32), n=batch, h=out_h, w=out_w)
+    mem = _unblock(mem[:nb], n=batch, h=out_h, w=out_w)
+    return spk[..., :kout], mem[..., :kout]
+
+
+def fused_conv_bn_lif(
+    x_t: jax.Array,  # (t_in, N, H, W, C): int8 {0,1} spikes, or u8-valued f32
+    pw: PackedConvWeights,
+    affine: jax.Array,  # (KB, 5, KBLK) from affine_bundle
+    *,
+    v0: jax.Array | None,  # (N, H, W, Kout) f32 initial membrane, None=cold
+    out_t: int,
+    in_bits: int,
+    bn_scale: float,
+    threshold: float,
+    leak: float,
+    bh: int = g2a.BLOCK_H,
+    bw: int = g2a.BLOCK_W,
+    nbt: int = 1,
+    predecode: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """The whole per-layer pipeline (conv → FXP rescale → tdBN affine → LIF
+    over ``out_t`` steps) in ONE Pallas dispatch. Returns
+    (spikes (out_t, N, H, W, Kout) f32 {0,1}, final membrane (N, H, W, Kout) f32).
+
+    ``in_bits=8`` runs the encoding layer: ``x_t`` then carries the u8-grid
+    pixel VALUES (as f32) — the exact fold of the 8 bit-serial planes, so
+    encode is one dispatch of the same kernel (see fused_pipeline.py).
+
+    ``predecode=True`` (default) runs the bitmask decoder stage host-side at
+    trace time — inference weights are static, so the decode is paid once
+    per compile instead of once per frame — and hands the kernel the dense
+    per-K-block weights. ``predecode=False`` keeps the decoder inside the
+    kernel (once per K-block per call, the paper's on-chip decode for
+    streaming weights); both are bit-identical and tested against each
+    other.
+    """
+    interpret = auto_interpret(interpret)
+    wdense = None
+    if predecode:
+        kb_total = pw.maskp.shape[0]
+        kp_tot = kb_total * pw.kblk
+        wd = unpack_conv_weights(pw).reshape(pw.kh * pw.kw, pw.cin, pw.kout)
+        wd = np.pad(wd, ((0, 0), (0, 0), (0, kp_tot - pw.kout)))
+        wdense = jnp.asarray(
+            wd.reshape(pw.kh * pw.kw, pw.cin, kb_total, pw.kblk).transpose(2, 0, 1, 3)
+        )
+    t_in, n, h, w, _ = x_t.shape
+    pad = (pw.kh - 1) // 2
+    in_dtype = jnp.float32 if in_bits == 8 else jnp.int8
+    flat = _block_layout(
+        x_t.reshape((t_in * n,) + x_t.shape[2:]).astype(in_dtype),
+        bh=bh,
+        bw=bw,
+        pad=pad,
+        cin_p=pw.cin,
+    )
+    nb = flat.shape[0] // t_in
+    blocks = flat.reshape((t_in, nb) + flat.shape[1:])
+    kp = pw.maskp.shape[0] * pw.kblk
+    if v0 is None:
+        v0b = jnp.zeros((nb, bh, bw, kp), jnp.float32)
+    else:
+        v0b = _block_layout_nohalo(v0.astype(jnp.float32), bh=bh, bw=bw, cpad=kp)
+    nbt_eff = max(1, min(nbt, nb))
+    if nb % nbt_eff:  # pad the block axis up to an nbt multiple
+        nb_p = (nb + nbt_eff - 1) // nbt_eff * nbt_eff
+        blocks = jnp.pad(blocks, ((0, 0), (0, nb_p - nb)) + ((0, 0),) * 3)
+        v0b = jnp.pad(v0b, ((0, nb_p - nb),) + ((0, 0),) * 3)
+    return _dispatch_fused(
+        blocks,
+        None if predecode else pw.maskp,
+        None if predecode else pw.vals,
+        affine,
+        v0b,
+        wdense,
+        kh=pw.kh,
+        kw=pw.kw,
+        kblk=pw.kblk,
+        bh=bh,
+        bw=bw,
+        nbt=nbt_eff,
+        t_out=out_t,
+        in_bits=in_bits,
+        tap_alive=tuple(pw.tap_alive),
+        bn_scale=bn_scale,
+        threshold=threshold,
+        leak=leak,
         out_h=h,
         out_w=w,
         batch=n,

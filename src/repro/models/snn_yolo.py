@@ -251,14 +251,43 @@ def _activation(y_t, cfg: SNNDetConfig, *, v0=None):
 
 
 def _conv_bn_act(
-    x_t, layer_p, layer_s, cfg, train, *, out_t=None, name=None, plan=None, v0=None
+    x_t, layer_p, layer_s, cfg, train, *, out_t=None, name=None, plan=None, v0=None,
+    affine=None,
 ):
     """Conv (per time step) → tdBN → activation.
 
     Mixed time steps: if out_t > x_t.shape[0] == 1, the conv result is
     computed ONCE and broadcast to out_t steps before the LIF (paper §II-A).
     Returns (act, new_bn_state, v_final).
+
+    At eval time on the pallas executor the whole chain collapses into ONE
+    fused dispatch per layer (``plan.run_fused``: conv → FXP rescale → tdBN
+    affine → LIF with the membrane resident in VMEM across T) — bit-exact
+    with the unfused path, so this is purely a dataflow change.
     """
+    t_out = out_t or x_t.shape[0]
+    if (
+        not train
+        and cfg.mode == "snn"
+        and cfg.conv_exec == "pallas"
+        and plan is not None
+        and name in plan.layers
+        and "gamma" in layer_p
+        and (x_t.shape[0] in (1, t_out))
+    ):
+        act, v_final = cplan.run_fused(
+            x_t,
+            plan.layers[name],
+            cfg,
+            gamma=layer_p["gamma"],
+            beta=layer_p["beta"],
+            mean=layer_s["mean"],
+            var=layer_s["var"],
+            v0=v0,
+            out_t=t_out,
+            affine=affine,
+        )
+        return act, layer_s, v_final  # eval-mode tdBN state is unchanged
     y_t = _conv_t(x_t, layer_p, cfg, name=name, plan=plan)
     if out_t is not None and out_t != y_t.shape[0]:
         assert y_t.shape[0] == 1, "can only broadcast from T=1"
@@ -286,6 +315,7 @@ def forward(
     train: bool = False,
     plan=None,
     membrane=None,
+    affines=None,
 ):
     """images: (N, H, W, 3) in [0, 1]. Returns (head, new_bn_state, aux).
 
@@ -303,6 +333,11 @@ def forward(
 
     ``membrane``: optional {layer_name: v} dict warm-starting every LIF
     membrane (cold start when None or when a layer key is missing).
+
+    ``affines``: optional {layer_name: bundle} of precomputed fused-kernel
+    affine parameter bundles (:func:`repro.core.plan.precompute_affines`) —
+    compile-once callers hoist the per-layer bundle build out of the frame
+    loop; missing keys fall back to the inline build (same values).
     """
     if cfg.conv_exec != "dense" and cfg.mode != "snn":
         # compressed executors consume int8 binary spikes; ann/qnn/bnn
@@ -331,6 +366,7 @@ def forward(
         )
     full_t = 1 if cfg.mode != "snn" else cfg.full_t
     new_state = dict(bn_state)
+    aff = affines or {}
     mem = membrane or {}
     new_mem: dict[str, Any] = {}
     aux: dict[str, Any] = {"spikes": {}, "membrane": new_mem}
@@ -341,7 +377,7 @@ def forward(
     # --- encode (ANN layer: fires once) ---
     s_t, new_state["encode"], new_mem["encode"] = _conv_bn_act(
         x_t, params["encode"], bn_state["encode"], cfg, train, name="encode",
-        plan=plan, v0=mem.get("encode"),
+        plan=plan, v0=mem.get("encode"), affine=aff.get("encode"),
     )
     aux["spikes"]["encode"] = s_t
     s_t = _maxpool_t(s_t)
@@ -355,6 +391,7 @@ def forward(
     s_t, new_state["conv_block"], new_mem["conv_block"] = _conv_bn_act(
         s_t, params["conv_block"], bn_state["conv_block"], cfg, train, out_t=out_t,
         name="conv_block", plan=plan, v0=mem.get("conv_block"),
+        affine=aff.get("conv_block"),
     )
     aux["spikes"]["conv_block"] = s_t
     s_t = _maxpool_t(s_t)
@@ -366,7 +403,7 @@ def forward(
         def cba(x_in, lname):
             return _conv_bn_act(
                 x_in, params[lname], bn_state[lname], cfg, train, name=lname,
-                plan=plan, v0=mem.get(lname),
+                plan=plan, v0=mem.get(lname), affine=aff.get(lname),
             )
 
         short, new_state[f"{name}/shortcut"], new_mem[f"{name}/shortcut"] = cba(

@@ -50,6 +50,21 @@ def _weight_leaves(params) -> tuple:
     return tuple(layer_p["w"] for layer_p in params.values())
 
 
+def _affine_input_leaves(params, bn_state) -> tuple:
+    """Every leaf the precomputed fused-kernel affine bundles were built
+    from (gamma/beta + calibrated BN mean/var) — fingerprinted alongside
+    the weights so a post-compile swap of any of them is refused instead of
+    silently serving stale normalization constants."""
+    leaves = []
+    for name in sorted(params):
+        p = params[name]
+        if "gamma" not in p or name not in (bn_state or {}):
+            continue
+        st = bn_state[name]
+        leaves += [p["gamma"], p["beta"], st["mean"], st["var"]]
+    return tuple(leaves)
+
+
 class SessionStep(NamedTuple):
     """One streamed frame's outputs: postprocessed detections + raw head."""
 
@@ -107,11 +122,28 @@ class CompiledDetector:
         # constants are lying about the model -> refuse loudly.
         self._compiled_leaves = _weight_leaves(params)
 
-        cfg_, plan_ = cfg, self._plan
+        # compile-once affine hoist (pallas executor): the fused kernel's
+        # per-layer parameter bundle depends only on weights + calibrated BN
+        # stats, so build the whole set here instead of re-deriving it from
+        # gamma/beta/mean/var on EVERY frame — those ops sit right before a
+        # pallas_call and can't fuse into it. The bundle inputs join the
+        # staleness fingerprint (check_plan) so a post-compile swap of
+        # bn_state or gamma/beta fails loudly rather than serving stale
+        # constants.
+        self._affines = None
+        self._affine_leaves: tuple = ()
+        if self._plan is not None and cfg.conv_exec == "pallas" and cfg.mode == "snn":
+            self._affines = cplan.precompute_affines(
+                self._plan, params, self.bn_state, cfg
+            )
+            self._affine_leaves = _affine_input_leaves(params, self.bn_state)
+
+        cfg_, plan_, affines_ = cfg, self._plan, self._affines
 
         def _step(params, bn, frames, mem):
             head, _, aux = sy.forward(
-                params, bn, frames, cfg_, train=False, plan=plan_, membrane=mem
+                params, bn, frames, cfg_, train=False, plan=plan_, membrane=mem,
+                affines=affines_,
             )
             dets = postprocess(
                 head,
@@ -143,6 +175,17 @@ class CompiledDetector:
                 "no longer match the weights — call "
                 "snn_yolo.compile_detector(cfg, params) again"
             )
+        if self._affines is not None:
+            now_aff = _affine_input_leaves(self.params, self.bn_state)
+            if len(now_aff) != len(self._affine_leaves) or any(
+                a is not b for a, b in zip(now_aff, self._affine_leaves)
+            ):
+                raise StalePlanError(
+                    "detector BN/affine parameters changed after compile: "
+                    "the precomputed fused-kernel affine bundles no longer "
+                    "match gamma/beta/mean/var — call "
+                    "snn_yolo.compile_detector(cfg, params, bn_state) again"
+                )
 
     # -------------------------------------------------------------- calls --
     def __call__(self, frames) -> Detections:

@@ -174,3 +174,34 @@ class TestSessionContract:
                     h[0], outs[k][row],
                     err_msg=f"{executor} row {row} state mixed at frame {k}",
                 )
+
+
+class TestFusedPathActive:
+    """The pallas rows above must test the FUSED pipeline, not a silent
+    fallback: the compiled step's trace must contain exactly one
+    pallas_call per fused-eligible (conv+tdBN+LIF) layer — encode's 8 bit-
+    serial planes fold into its single dispatch, and the pointwise head
+    (no tdBN/LIF to fuse) contracts outside the kernel."""
+
+    def test_one_dispatch_per_fused_layer(self, inputs):
+        import dataclasses
+
+        from repro.kernels import backend
+        from repro.models import snn_yolo as sy
+
+        params, bn, frames = inputs
+        cfg = dataclasses.replace(
+            golden.conformance_config(), conv_exec="pallas"
+        )
+        det = sy.compile_detector(cfg, params, bn)
+        fused_layers = [n for n in det.plan.layers if "gamma" in params[n]]
+        assert fused_layers, "no fused-eligible layers — config degenerate"
+        n_calls = backend.count_pallas_calls(
+            lambda f: det._step(det.params, det.bn_state, f, None)[0],
+            frames[0],
+        )
+        assert n_calls == len(fused_layers), (
+            f"pallas step traced {n_calls} pallas_calls for "
+            f"{len(fused_layers)} fused-eligible layers — the fused "
+            "pipeline is not one-dispatch-per-layer"
+        )

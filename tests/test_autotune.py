@@ -1,0 +1,150 @@
+"""Autotune cache contract (kernels/autotune.py): deterministic
+serialization, safe fallback on missing/stale/corrupt caches, and — the
+load-bearing property — tile choice NEVER changes numerics, only speed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import plan as cplan
+from repro.core import pruning
+from repro.kernels import autotune as at
+from repro.models import snn_yolo as sy
+
+
+def _shape_1x1(**kw) -> at.LayerShape:
+    base = dict(kh=1, kw=1, cin=8, kout=8, in_bits=1, t_in=2, t_out=2,
+                h=12, w=16, bh=6, bw=8)
+    base.update(kw)
+    return at.LayerShape(**base)
+
+
+class TestCacheRoundTrip:
+    def test_save_load_round_trip(self, tmp_path):
+        entries = {
+            _shape_1x1().key: at.TileConfig(kblk=16, nbt=4),
+            _shape_1x1(kh=3, kw=3).key: at.TileConfig(kblk=8, nbt=1),
+        }
+        p = tmp_path / "cache.json"
+        at.save_cache(entries, str(p))
+        assert at.load_cache(str(p)) == entries
+
+    def test_serialization_is_deterministic(self, tmp_path):
+        """Identical entry sets → byte-identical files, regardless of
+        insertion order (the checked-in cache must be reproducible)."""
+        a = {"k2": at.TileConfig(8, 1), "k1": at.TileConfig(16, 4)}
+        b = {"k1": at.TileConfig(16, 4), "k2": at.TileConfig(8, 1)}
+        pa, pb = tmp_path / "a.json", tmp_path / "b.json"
+        at.save_cache(a, str(pa))
+        at.save_cache(b, str(pb))
+        assert pa.read_bytes() == pb.read_bytes()
+
+    def test_tune_with_injected_measure_is_deterministic(self, tmp_path):
+        """Same shapes + same (injected, wall-clock-free) measurements →
+        identical winners → byte-identical cache files across runs."""
+
+        def fake_measure(tile, run):  # prefers wide K-blocks, big groups
+            return 1.0 / (tile.kblk * 100 + tile.nbt)
+
+        shape = _shape_1x1(kh=3, kw=3, kout=16)
+        blobs = []
+        for name in ("x.json", "y.json"):
+            tile, record = at.tune_layer(shape, measure_fn=fake_measure)
+            p = tmp_path / name
+            at.save_cache({shape.key: tile}, str(p))
+            blobs.append(p.read_bytes())
+        assert blobs[0] == blobs[1]
+        # the fake metric's argmin is the largest legal (kblk, nbt)
+        assert tile == max(at.candidates(shape),
+                           key=lambda t: t.kblk * 100 + t.nbt)
+
+    def test_record_covers_every_candidate(self):
+        shape = _shape_1x1()
+        seen = []
+
+        def fake_measure(tile, run):
+            seen.append(tile)
+            return float(tile.nbt)
+
+        at.tune_layer(shape, measure_fn=fake_measure)
+        assert seen == at.candidates(shape)
+
+
+class TestCacheFallback:
+    def test_missing_cache_falls_back_to_default(self, tmp_path):
+        missing = str(tmp_path / "nope.json")
+        assert at.load_cache(missing) == {}
+        assert at.lookup(_shape_1x1(), at.load_cache(missing)) == at.DEFAULT_TILE
+
+    def test_stale_version_falls_back(self, tmp_path):
+        p = tmp_path / "stale.json"
+        payload = {"version": at.CACHE_VERSION + 1,
+                   "entries": {_shape_1x1().key: {"kblk": 8, "nbt": 4}}}
+        p.write_text(json.dumps(payload))
+        assert at.load_cache(str(p)) == {}
+
+    def test_corrupt_cache_falls_back(self, tmp_path):
+        p = tmp_path / "corrupt.json"
+        p.write_text("{not json")
+        assert at.load_cache(str(p)) == {}
+
+    def test_one_bad_entry_keeps_the_rest(self, tmp_path):
+        p = tmp_path / "partial.json"
+        good = _shape_1x1().key
+        payload = {"version": at.CACHE_VERSION,
+                   "entries": {good: {"kblk": 16, "nbt": 2},
+                               "broken": {"kblk": "wide"}}}
+        p.write_text(json.dumps(payload))
+        loaded = at.load_cache(str(p))
+        assert loaded == {good: at.TileConfig(kblk=16, nbt=2)}
+
+
+class TestTileNumericsInvariance:
+    """The whole premise of tuning as a pure wall-clock search: any legal
+    tile produces BIT-IDENTICAL detector output."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        from repro.configs import get_config, smoke_config
+
+        cfg = dataclasses.replace(
+            smoke_config(get_config("snn-det")), arch_id="snn-det-tiletest",
+            use_block_conv=True, conv_exec="pallas",
+        )
+        params, bn = sy.init_params(jax.random.PRNGKey(0), cfg)
+        params = pruning.prune_tree(params, 0.8)
+        rng = np.random.default_rng(0)
+        h, w = cfg.input_hw
+        frames = (rng.integers(0, 256, (1, h, w, 3)) / 255.0).astype(np.float32)
+        bn = sy.calibrate_bn_state(params, bn, frames, cfg)
+        return cfg, params, bn, frames
+
+    def _head(self, setup, tile_cache):
+        cfg, params, bn, frames = setup
+        plan = cplan.build_plan(params, cfg, tile_cache=tile_cache)
+        head, _, _ = sy.forward(params, bn, frames, cfg, train=False, plan=plan)
+        return np.asarray(head)
+
+    def test_untuned_equals_tuned(self, setup):
+        """Empty cache (every layer at DEFAULT_TILE) vs the persisted
+        autotuned cache: numerics must be bit-equal."""
+        untuned = self._head(setup, tile_cache={})
+        tuned = self._head(setup, tile_cache=None)  # packaged cache file
+        np.testing.assert_array_equal(untuned, tuned)
+
+    def test_arbitrary_tiles_are_bit_equal(self, setup):
+        """Force a deliberately different legal tiling for every layer."""
+        cfg, params, bn, frames = setup
+        shapes = at.detector_layer_shapes(cfg)
+        forced = {}
+        for shape in shapes.values():
+            cands = at.candidates(shape)
+            forced[shape.key] = cands[-1]  # largest legal, != DEFAULT often
+        got = self._head(setup, tile_cache=forced)
+        want = self._head(setup, tile_cache={})
+        np.testing.assert_array_equal(got, want)
