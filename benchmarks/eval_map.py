@@ -21,14 +21,73 @@ annotated frames (``repro.data.detection_datasets``); ``--ckpt-dir``
 commits detector checkpoints after the train and QAT stages for
 ``launch/serve.py --checkpoint`` to restore.
 
+``--checkpoint <dir>`` skips training entirely and scores a saved
+detector directly (``harness.restore_detector_checkpoint`` — any
+committed detector checkpoint: trained, QAT'd, or ANN→SNN converted via
+``repro.convert``). Composes with ``--shards`` (parity gate included)
+and ``--dataset``; ``--fast`` only trims the image count.
+
   PYTHONPATH=src python -m benchmarks.eval_map [--fast] [--shards 4]
       [--dataset coco:tests/fixtures/coco_fixture/instances.json]
       [--ckpt-dir /tmp/snn_det_ckpt] [--out-json BENCH_eval.json]
+  PYTHONPATH=src python -m benchmarks.eval_map --checkpoint /tmp/converted
 """
 from __future__ import annotations
 
 import argparse
 import json
+
+
+def run_checkpoint(ckpt: str, *, eval_images: int = 48, shards: int = 1,
+                   dataset: str = "synthetic",
+                   out_json: str = "BENCH_eval_ckpt.json") -> dict:
+    """Score a saved detector checkpoint — no training anywhere."""
+    from repro.data import detection_datasets as dd
+    from repro.eval import harness
+
+    source = dd.parse_dataset_spec(dataset)
+    cfg, params, bn, step = harness.restore_detector_checkpoint(ckpt)
+    det = harness.compile_eval_detector(cfg, params, bn)
+    rep = harness.evaluate_detector(
+        det, n_images=eval_images, source=source,
+        sharded=shards if shards > 1 else None,
+    )
+    print(f"  checkpoint {ckpt} (step {step}, arch {cfg.arch_id}): "
+          f"mAP@0.5 {rep['map']:.4f} on {rep['n_images']} images")
+    results = {
+        "config": {
+            "checkpoint": ckpt, "step": step, "arch_id": cfg.arch_id,
+            "eval_images": eval_images, "eval_shards": shards,
+            "dataset": dataset,
+        },
+        "map": rep["map"],
+        "per_class_ap": rep["per_class_ap"],
+        "n_gt": rep["n_gt"],
+        "n_images": rep["n_images"],
+    }
+    if shards > 1:
+        from repro.eval.sharded import reports_identical
+
+        single = harness.evaluate_detector(
+            det, n_images=eval_images, source=source
+        )
+        identical = reports_identical(rep, single)
+        results["sharded_parity"] = {
+            "n_shards": shards,
+            "map_sharded": rep["map"],
+            "map_single_host": single["map"],
+            "bit_identical": identical,
+        }
+        if not identical:
+            raise SystemExit(
+                f"sharded ({shards}-way) checkpoint mAP is not bit-identical "
+                f"to single-host: {rep['map']!r} vs {single['map']!r}"
+            )
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"  wrote {out_json}")
+    return results
 
 
 def run(*, steps: int = 3500, finetune_steps: int = 600, batch: int = 6,
@@ -107,10 +166,22 @@ def main(argv=None):
                     help="commit detector checkpoints (post-train and "
                          "post-QAT) here; launch/serve.py --checkpoint "
                          "restores them")
+    ap.add_argument("--checkpoint", default=None,
+                    help="score this saved detector checkpoint directly "
+                         "(no training); any committed detector checkpoint "
+                         "works, including repro.convert output")
     ap.add_argument("--out-json", default="BENCH_eval.json",
                     help="result file ('' skips writing — CI smoke runs "
                          "that must not clobber the checked-in numbers)")
     args = ap.parse_args(argv)
+    if args.checkpoint:
+        out = (args.out_json if args.out_json != "BENCH_eval.json"
+               else "BENCH_eval_ckpt.json")
+        run_checkpoint(
+            args.checkpoint, shards=args.shards, dataset=args.dataset,
+            eval_images=8 if args.fast else 48, out_json=out,
+        )
+        return
     kw = dict(shards=args.shards, dataset=args.dataset,
               ckpt_dir=args.ckpt_dir, out_json=args.out_json)
     if args.fast:

@@ -75,6 +75,33 @@ class DetectorPlan(NamedTuple):
     def compressed_bytes(self) -> int:
         return sum(lp.compressed_bytes for lp in self.layers.values())
 
+    def summary(self) -> dict:
+        """JSON-serializable per-layer compression report (nnz, density,
+        dense vs packed bytes, FXP scale) plus totals — what the conversion
+        front-end embeds in its checkpoint report and ``examples/
+        convert_ann_detector.py`` prints."""
+        layers = {
+            name: {
+                "shape": list(lp.w_q.shape),
+                "nnz": int(lp.nnz),
+                "density": round(lp.nnz / max(1, lp.dense_bytes), 4),
+                "dense_bytes": lp.dense_bytes,
+                "compressed_bytes": lp.compressed_bytes,
+                "scale": float(np.asarray(lp.scale)),
+                "in_bits": lp.in_bits,
+            }
+            for name, lp in self.layers.items()
+        }
+        return {
+            "block_hw": list(self.block_hw),
+            "layers": layers,
+            "dense_bytes": self.dense_bytes,
+            "compressed_bytes": self.compressed_bytes,
+            "compression_ratio": round(
+                self.dense_bytes / max(1, self.compressed_bytes), 3
+            ),
+        }
+
 
 # ------------------------------------------------------------------ build --
 
@@ -403,6 +430,8 @@ def run_fused(
         bn_scale=1.0 * cfg.threshold,  # tdbn_apply's alpha(=1)·threshold
         threshold=cfg.threshold,
         leak=cfg.leak,
+        reset=getattr(cfg, "reset", "hard"),
+        v_init=getattr(cfg, "v_init", 0.0),
         bh=bh,
         bw=bw,
         nbt=lp.tile.nbt,

@@ -29,7 +29,11 @@ def quantize(x: jax.Array, *, axis=None, bits: int = 8) -> Quantized:
         amax = jnp.max(jnp.abs(x))
     else:
         amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / qmax
+    # All-zero slices (dead channels from pruning or ANN→SNN conversion)
+    # have amax == 0; an unguarded max|x|/qmax scale would be 0 there and
+    # x/scale → 0/0 NaN. Give dead slices scale 1 so q == 0 and dequantize
+    # returns exact zeros; live slices keep the exact max|x|/qmax scale.
+    scale = jnp.where(amax > 0, amax, float(qmax)) / qmax
     q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int8)
     return Quantized(q=q, scale=scale.astype(jnp.float32))
 

@@ -167,15 +167,23 @@ def compile_eval_detector(cfg, params, bn, **kw):
 DETECTOR_CONFIG_FILE = "detector_config.json"
 
 
-def save_detector_checkpoint(root: str, step: int, params, bn, cfg) -> str:
+def save_detector_checkpoint(root: str, step: int, params, bn, cfg, *,
+                             extra_files=None) -> str:
     """Commit ``{"params", "bn"}`` plus the full config as an atomic
     detector checkpoint under ``root`` (``train/checkpoint.py`` layout).
     The config sidecar rides inside the step dir, so the rename-commit
     covers it too — a reader can never see weights without their config.
-    Returns the committed directory."""
+
+    ``extra_files``: additional {filename: bytes} sidecars committed
+    atomically alongside (e.g. the ANN→SNN ``conversion_report.json``);
+    the config sidecar name is reserved. Returns the committed directory."""
     blob = json.dumps(sy.config_to_dict(cfg), indent=1).encode()
+    files = dict(extra_files or {})
+    if DETECTOR_CONFIG_FILE in files:
+        raise ValueError(f"extra_files may not shadow {DETECTOR_CONFIG_FILE!r}")
+    files[DETECTOR_CONFIG_FILE] = blob
     return ckpt.save(root, step, {"params": params, "bn": bn},
-                     extra_files={DETECTOR_CONFIG_FILE: blob})
+                     extra_files=files)
 
 
 def restore_detector_checkpoint(root: str, *, step: Optional[int] = None,

@@ -32,6 +32,7 @@ import functools
 import json
 import os
 import time
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
@@ -97,17 +98,47 @@ def cache_path(path: str | None = None) -> str:
     return path or os.environ.get(CACHE_ENV_VAR) or DEFAULT_CACHE_PATH
 
 
+# Paths already complained about — a stale/corrupt cache is consulted once
+# per LAYER at plan-build time, so an unguarded warn would fire ~27× per
+# detector compile. One warning per cache path per process is enough.
+_warned_paths: set[str] = set()
+
+
+def _warn_once(path: str, detail: str) -> None:
+    if path in _warned_paths:
+        return
+    _warned_paths.add(path)
+    warnings.warn(
+        f"autotune cache {path!r} ignored ({detail}); all layers fall back "
+        f"to the default tiling {tuple(DEFAULT_TILE)} — numerics are "
+        "unaffected, only speed. Regenerate with `python -m "
+        "repro.kernels.autotune`.",
+        RuntimeWarning,
+        stacklevel=3,
+    )
+
+
 def load_cache(path: str | None = None) -> dict[str, TileConfig]:
     """Load the shape→tile cache. A missing, corrupt, or version-stale file
     yields {} — callers then run every layer at :data:`DEFAULT_TILE`, which
-    is always numerically identical, just untuned."""
+    is always numerically identical, just untuned. A cache file that EXISTS
+    but can't be used (corrupt JSON, version mismatch) warns once per
+    process with the path and the found-vs-expected version; a simply
+    missing file stays silent (the untuned default is a supported state)."""
     p = cache_path(path)
     try:
         with open(p) as f:
             raw = json.load(f)
-    except (OSError, json.JSONDecodeError):
+    except FileNotFoundError:
+        return {}
+    except (OSError, json.JSONDecodeError) as e:
+        _warn_once(p, f"corrupt: {e}")
         return {}
     if not isinstance(raw, dict) or raw.get("version") != CACHE_VERSION:
+        found = raw.get("version") if isinstance(raw, dict) else type(raw).__name__
+        _warn_once(
+            p, f"version mismatch: found {found!r}, expected {CACHE_VERSION!r}"
+        )
         return {}
     out = {}
     for key, cfgd in raw.get("entries", {}).items():

@@ -100,6 +100,7 @@ def _kernel(
     bn_scale: float,  # alpha * threshold (tdBN), a trace-time constant
     threshold: float,
     leak: float,
+    reset: str,
     predecode: bool,
     conv_body: bool,  # interpret mode: one lax.conv instead of im2col ops
 ):
@@ -228,10 +229,16 @@ def _kernel(
         v = _rounded(v * leak) + y
         spiked = v >= threshold
         spk_ref[t] = spiked.reshape(nbt, bh, bw, kblk).astype(jnp.int8)
-        # hard reset: where(s, 0, v) ≡ v·(1−s) for s ∈ {0,1} (no arithmetic
-        # → no rounding, so no _rounded barrier needed; ±0.0 both propagate
-        # as exact zero through v·leak + y)
-        v = jnp.where(spiked, 0.0, v)
+        if reset == "soft":
+            # reset by subtraction: where(s, v−θ, v) ≡ v − s·θ for
+            # s ∈ {0,1} (s·θ is exactly 0 or θ, so one subtraction either
+            # way — bit-identical to core.lif.lif_step's soft branch)
+            v = jnp.where(spiked, v - threshold, v)
+        else:
+            # hard reset: where(s, 0, v) ≡ v·(1−s) for s ∈ {0,1} (no
+            # arithmetic → no rounding, so no _rounded barrier needed;
+            # ±0.0 both propagate as exact zero through v·leak + y)
+            v = jnp.where(spiked, 0.0, v)
     mem_ref[...] = v.reshape(nbt, bh, bw, kblk)
 
 
@@ -254,6 +261,7 @@ def fused_pipeline_pallas(
     bn_scale: float,
     threshold: float,
     leak: float,
+    reset: str = "hard",
     wdense: jax.Array | None = None,  # (KB, taps, C, KBLK) int8 (predecoded)
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
@@ -314,6 +322,7 @@ def fused_pipeline_pallas(
             bn_scale=bn_scale,
             threshold=threshold,
             leak=leak,
+            reset=reset,
             predecode=predecode,
             conv_body=bool(interpret),
         ),

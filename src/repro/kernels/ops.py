@@ -308,6 +308,7 @@ def affine_bundle(
         "bn_scale",
         "threshold",
         "leak",
+        "reset",
         "out_h",
         "out_w",
         "batch",
@@ -335,6 +336,7 @@ def _dispatch_fused(
     bn_scale,
     threshold,
     leak,
+    reset,
     out_h,
     out_w,
     batch,
@@ -359,6 +361,7 @@ def _dispatch_fused(
         bn_scale=bn_scale,
         threshold=threshold,
         leak=leak,
+        reset=reset,
         wdense=wdense,
         interpret=interpret,
     )
@@ -379,6 +382,8 @@ def fused_conv_bn_lif(
     bn_scale: float,
     threshold: float,
     leak: float,
+    reset: str = "hard",
+    v_init: float = 0.0,
     bh: int = g2a.BLOCK_H,
     bw: int = g2a.BLOCK_W,
     nbt: int = 1,
@@ -425,7 +430,9 @@ def fused_conv_bn_lif(
     blocks = flat.reshape((t_in, nb) + flat.shape[1:])
     kp = pw.maskp.shape[0] * pw.kblk
     if v0 is None:
-        v0b = jnp.zeros((nb, bh, bw, kp), jnp.float32)
+        # cold start at v_init (conversion's θ/2 rounding trick); padded
+        # channels/blocks get it too but are sliced away on the way out
+        v0b = jnp.full((nb, bh, bw, kp), v_init, jnp.float32)
     else:
         v0b = _block_layout_nohalo(v0.astype(jnp.float32), bh=bh, bw=bw, cpad=kp)
     nbt_eff = max(1, min(nbt, nb))
@@ -452,6 +459,7 @@ def fused_conv_bn_lif(
         bn_scale=bn_scale,
         threshold=threshold,
         leak=leak,
+        reset=reset,
         out_h=h,
         out_w=w,
         batch=n,

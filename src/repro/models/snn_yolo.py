@@ -66,12 +66,53 @@ class SNNDetConfig:
     full_t: int = 3
     threshold: float = 0.5
     leak: float = 0.25
+    # LIF reset mode (core.lif.ResetMode): "hard" — the paper's v·(1−s)
+    # (training default); "soft" — reset by subtraction, v −= θ on spike.
+    # ANN→SNN conversion (repro.convert) emits "soft": with it the firing
+    # rate tracks clamp(drive/θ) with O(1/T) error instead of the hard
+    # reset's systematic overshoot loss, which compounds through depth.
+    reset: str = "hard"
+    # cold-start membrane potential of every spiking layer (streaming
+    # sessions that carry v across frames override it). Conversion sets
+    # θ/2: the spike count becomes round(T·y/θ) instead of floor(·) — an
+    # UNBIASED rate code, killing the per-layer undercount that otherwise
+    # compounds through depth.
+    v_init: float = 0.0
+    # pool the tdBN DRIVES (pre-LIF) instead of the spike trains at every
+    # max-pool site (snn mode only). OR-ing spike trains overestimates the
+    # ANN's max-pool (union rate ≥ max rate); pooling the drive commutes
+    # with the monotone tdBN→LIF chain, so the converted net's pooled
+    # firing rate tracks exactly the ANN's pooled activation. Training
+    # keeps the paper's spike OR gate (False).
+    pool_drive: bool = False
+    # spike max-pool semantics (snn mode): "or" — the paper's OR gate
+    # (union of the window's spike trains; its rate OVERESTIMATES the
+    # ANN's max, union rate ≥ max rate); "rate" — rate-gated pooling
+    # (Rueckauer et al. 2017): each window passes the CURRENT spike of
+    # the input with the highest running spike count, so the pooled rate
+    # tracks the max input rate. Conversion emits "rate"; training keeps
+    # the paper's "or".
+    pool_mode: str = "or"
+    # spiking head readout: "mean" — the paper's no-reset membrane
+    # averaged over T, which weights a spike at step t by (T−t+1)/T so
+    # LATE spikes count less (low-rate neurons fire late under rate
+    # coding and get systematically crushed); "final" — final membrane
+    # divided by T, weighting every step equally (timing-free for
+    # leak=1, what conversion needs).
+    head_readout: str = "mean"
     mode: Mode = "snn"
     act_bits: int = 4  # QNN activation precision (Table II sweeps 2/3/4)
     weight_bits: int = 8  # 0 = float weights
     use_block_conv: bool = False
     # in_T per LIF-producing macro layer: encode, conv_block, stages...
     mixed_time: bool = True
+    # rate-coded encoding: the encode layer's conv result (computed ONCE —
+    # in_T stays 1) drives its LIF for full_t steps, emitting a spike TRAIN
+    # instead of the paper's single binary plane. The paper's trained nets
+    # learn around the 1-bit encode; ANN→SNN conversion (repro.convert)
+    # cannot, so converted configs flip this on. Executor plans and the
+    # fused kernel handle it unchanged (same broadcast path as conv_block).
+    rate_encode: bool = False
     # which conv executor runs every layer (core/plan.py registry):
     # "dense" oracle, "gated" shift-accumulate reference, "pallas" kernel
     conv_exec: str = "dense"
@@ -233,9 +274,12 @@ def _activation(y_t, cfg: SNNDetConfig, *, v0=None):
     sessions carry it across frames); v_final is None for stateless modes.
     """
     if cfg.mode == "snn":
+        if v0 is None and cfg.v_init:
+            v0 = jnp.full(y_t.shape[1:], cfg.v_init, y_t.dtype)
         init = None if v0 is None else lifm.LIFState(v=v0)
         spikes, final = lifm.lif_over_time(
-            y_t, threshold=cfg.threshold, leak=cfg.leak, init=init
+            y_t, threshold=cfg.threshold, leak=cfg.leak, reset=cfg.reset,
+            init=init,
         )
         return spikes, final.v
     if cfg.mode == "ann":
@@ -252,7 +296,7 @@ def _activation(y_t, cfg: SNNDetConfig, *, v0=None):
 
 def _conv_bn_act(
     x_t, layer_p, layer_s, cfg, train, *, out_t=None, name=None, plan=None, v0=None,
-    affine=None,
+    affine=None, taps=None, pool=False,
 ):
     """Conv (per time step) → tdBN → activation.
 
@@ -260,14 +304,26 @@ def _conv_bn_act(
     computed ONCE and broadcast to out_t steps before the LIF (paper §II-A).
     Returns (act, new_bn_state, v_final).
 
+    ``pool``: this layer's output feeds a 2×2 max-pool. With
+    ``cfg.pool_drive`` (snn mode) the pool runs HERE, on the tdBN drive
+    before the LIF — the caller must then skip its own ``_maxpool_t`` —
+    so the pooled firing rate tracks the ANN's pooled activation instead
+    of the OR-gate union. Forces the unfused path (the fused kernel's
+    conv→affine→LIF chain has no pool stage between affine and LIF).
+
     At eval time on the pallas executor the whole chain collapses into ONE
     fused dispatch per layer (``plan.run_fused``: conv → FXP rescale → tdBN
     affine → LIF with the membrane resident in VMEM across T) — bit-exact
-    with the unfused path, so this is purely a dataflow change.
+    with the unfused path, so this is purely a dataflow change. When
+    ``taps`` is given the chain stays unfused so the tdBN output can be
+    recorded — numerics are identical either way (PR 6 conformance).
     """
     t_out = out_t or x_t.shape[0]
+    pool_inside = pool and cfg.pool_drive and cfg.mode == "snn"
     if (
         not train
+        and taps is None
+        and not pool_inside
         and cfg.mode == "snn"
         and cfg.conv_exec == "pallas"
         and plan is not None
@@ -293,6 +349,10 @@ def _conv_bn_act(
         assert y_t.shape[0] == 1, "can only broadcast from T=1"
         y_t = jnp.broadcast_to(y_t, (out_t,) + y_t.shape[1:])
     y_t, new_s = _tdbn(y_t, layer_p, layer_s, cfg, train)
+    if taps is not None and name is not None:
+        taps[name] = y_t  # tdBN output, PRE-pool (matches the ANN taps)
+    if pool_inside:
+        y_t = _maxpool_t(y_t)
     act, v_final = _activation(y_t, cfg, v0=v0)
     return act, new_s, v_final
 
@@ -306,6 +366,35 @@ def _maxpool_t(x_t):
     )(x_t)
 
 
+def _rate_gated_pool_t(s_t):
+    """2×2 rate-gated spike pool (Rueckauer et al. 2017): each window
+    emits the CURRENT spike of the input with the highest cumulative
+    spike count, so the pooled rate converges to the max input rate —
+    the OR gate's union rate systematically overestimates it. Counts are
+    encoded into the max-reduce key as 2·count + spike (count ≤ T ≪ 2²³
+    so the f32 encoding is exact); ties break toward a spiking input,
+    which makes the first steps degrade gracefully to the OR gate."""
+
+    def step(c, s):
+        c = c + s
+        key = c * 2.0 + s
+        m = jax.lax.reduce_window(
+            key, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+        return c, m % 2.0
+
+    _, out = jax.lax.scan(step, jnp.zeros_like(s_t[0]), s_t)
+    return out
+
+
+def _pool_t(s_t, cfg: SNNDetConfig):
+    """Pool a spike/activation volume per ``cfg.pool_mode`` (snn mode
+    only — ann/qnn/bnn activations are real-valued, where max IS max)."""
+    if cfg.mode == "snn" and cfg.pool_mode == "rate":
+        return _rate_gated_pool_t(s_t)
+    return _maxpool_t(s_t)
+
+
 def forward(
     params,
     bn_state,
@@ -316,6 +405,7 @@ def forward(
     plan=None,
     membrane=None,
     affines=None,
+    taps=None,
 ):
     """images: (N, H, W, 3) in [0, 1]. Returns (head, new_bn_state, aux).
 
@@ -338,6 +428,12 @@ def forward(
     affine parameter bundles (:func:`repro.core.plan.precompute_affines`) —
     compile-once callers hoist the per-layer bundle build out of the frame
     loop; missing keys fall back to the inline build (same values).
+
+    ``taps``: optional mutable dict — when given, every layer records its
+    tdBN output (the per-step LIF input drive, shape (T, N, H, W, C)) under
+    its layer name, plus the raw head conv output under "head". Used by the
+    ANN→SNN conversion front-end (:mod:`repro.convert`) to verify rescale
+    exactness and fit the head readout scale; forces the unfused path.
     """
     if cfg.conv_exec != "dense" and cfg.mode != "snn":
         # compressed executors consume int8 binary spikes; ann/qnn/bnn
@@ -374,13 +470,17 @@ def forward(
     x = images.astype(jnp.float32)
     x_t = x[None]  # encoding layer sees the raw image once (in_T = 1)
 
-    # --- encode (ANN layer: fires once) ---
+    # --- encode (ANN layer: fires once — or rate-codes when rate_encode) ---
+    enc_t = full_t if (cfg.rate_encode and cfg.mode == "snn") else None
+    pd = cfg.pool_drive and cfg.mode == "snn"  # pools already ran inside
     s_t, new_state["encode"], new_mem["encode"] = _conv_bn_act(
-        x_t, params["encode"], bn_state["encode"], cfg, train, name="encode",
-        plan=plan, v0=mem.get("encode"), affine=aff.get("encode"),
+        x_t, params["encode"], bn_state["encode"], cfg, train, out_t=enc_t,
+        name="encode", plan=plan, v0=mem.get("encode"),
+        affine=aff.get("encode"), taps=taps, pool=True,
     )
     aux["spikes"]["encode"] = s_t
-    s_t = _maxpool_t(s_t)
+    if not pd:
+        s_t = _pool_t(s_t, cfg)
 
     # --- conv block: in_T=1, out_T=full_t (mixed time steps) ---
     out_t = full_t if cfg.mixed_time else s_t.shape[0]
@@ -391,19 +491,21 @@ def forward(
     s_t, new_state["conv_block"], new_mem["conv_block"] = _conv_bn_act(
         s_t, params["conv_block"], bn_state["conv_block"], cfg, train, out_t=out_t,
         name="conv_block", plan=plan, v0=mem.get("conv_block"),
-        affine=aff.get("conv_block"),
+        affine=aff.get("conv_block"), taps=taps, pool=True,
     )
     aux["spikes"]["conv_block"] = s_t
-    s_t = _maxpool_t(s_t)
+    if not pd:
+        s_t = _pool_t(s_t, cfg)
 
     # --- CSP basic blocks ---
     for i in range(len(cfg.stage_channels)):
         name = f"stage{i}"
 
-        def cba(x_in, lname):
+        def cba(x_in, lname, pool=False):
             return _conv_bn_act(
                 x_in, params[lname], bn_state[lname], cfg, train, name=lname,
-                plan=plan, v0=mem.get(lname), affine=aff.get(lname),
+                plan=plan, v0=mem.get(lname), affine=aff.get(lname), taps=taps,
+                pool=pool,
             )
 
         short, new_state[f"{name}/shortcut"], new_mem[f"{name}/shortcut"] = cba(
@@ -415,17 +517,26 @@ def forward(
         m, new_state[f"{name}/main_a"], new_mem[f"{name}/main_a"] = cba(m, f"{name}/main_a")
         m, new_state[f"{name}/main_b"], new_mem[f"{name}/main_b"] = cba(m, f"{name}/main_b")
         cat = jnp.concatenate([m, short], axis=-1)
-        s_t, new_state[f"{name}/agg"], new_mem[f"{name}/agg"] = cba(cat, f"{name}/agg")
+        s_t, new_state[f"{name}/agg"], new_mem[f"{name}/agg"] = cba(
+            cat, f"{name}/agg", pool=i < cfg.pooled_stages - 1
+        )
         aux["spikes"][name] = s_t
-        if i < cfg.pooled_stages - 1:
-            s_t = _maxpool_t(s_t)
+        if i < cfg.pooled_stages - 1 and not pd:
+            s_t = _pool_t(s_t, cfg)
 
     # --- output conv: accumulate membrane with no reset, average over T ---
     y_t = _conv_t(s_t, params["head"], cfg, name="head", plan=plan)
+    if taps is not None:
+        taps["head"] = y_t
     if cfg.mode == "snn":
         head, new_mem["head"] = lifm.membrane_readout(
             y_t, leak=cfg.leak, v0=mem.get("head"), return_final=True
         )
+        if cfg.head_readout == "final":
+            # final membrane / T: every step weighted equally (the mean
+            # readout weights step t by (T−t+1)/T, biased against the
+            # late first-spikes of low-rate neurons)
+            head = new_mem["head"] / y_t.shape[0]
     else:
         head = jnp.mean(y_t, axis=0)
     n, gh, gw, _ = head.shape

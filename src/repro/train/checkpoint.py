@@ -169,6 +169,19 @@ def latest_step(root: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def read_extra_file(root: str, fname: str, *, step: Optional[int] = None) -> bytes:
+    """Read back an ``extra_files`` sidecar from a committed checkpoint
+    (latest step by default). Raises FileNotFoundError if the step or the
+    sidecar does not exist — a committed step dir can legally lack any
+    given sidecar (only the manifest is guaranteed)."""
+    step = step if step is not None else latest_step(root)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint under {root}")
+    path = os.path.join(root, f"step_{step:09d}", fname)
+    with open(path, "rb") as f:
+        return f.read()
+
+
 def restore(root: str, template: Any, *, step: Optional[int] = None, shardings: Any = None):
     """Restore into the structure of `template`. `shardings` (optional
     pytree of NamedSharding, same structure) re-shards for the CURRENT mesh

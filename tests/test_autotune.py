@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import warnings
 
 import jax
 import numpy as np
@@ -92,6 +93,38 @@ class TestCacheFallback:
         p = tmp_path / "corrupt.json"
         p.write_text("{not json")
         assert at.load_cache(str(p)) == {}
+
+    def test_corrupt_cache_warns_once_with_details(self, tmp_path):
+        """A cache file that EXISTS but is unusable warns exactly ONCE per
+        process per path (plan builds consult it per layer — ~27× per
+        detector compile) and the warning names the path; a version-stale
+        file also reports found-vs-expected versions. A missing file stays
+        silent (untuned is a supported state)."""
+        corrupt = tmp_path / "corrupt.json"
+        corrupt.write_text("{not json")
+        stale = tmp_path / "stale.json"
+        stale.write_text(json.dumps({"version": at.CACHE_VERSION + 1,
+                                     "entries": {}}))
+        saved = set(at._warned_paths)
+        at._warned_paths.clear()
+        try:
+            with pytest.warns(RuntimeWarning, match=str(corrupt)):
+                assert at.load_cache(str(corrupt)) == {}
+            with warnings.catch_warnings():
+                warnings.simplefilter("error")  # a repeat would raise
+                assert at.load_cache(str(corrupt)) == {}
+            with pytest.warns(RuntimeWarning) as rec:
+                assert at.load_cache(str(stale)) == {}
+            (msg,) = [str(w.message) for w in rec]
+            assert str(stale) in msg
+            assert str(at.CACHE_VERSION + 1) in msg
+            assert str(at.CACHE_VERSION) in msg
+            with warnings.catch_warnings():
+                warnings.simplefilter("error")
+                assert at.load_cache(str(tmp_path / "missing.json")) == {}
+        finally:
+            at._warned_paths.clear()
+            at._warned_paths.update(saved)
 
     def test_one_bad_entry_keeps_the_rest(self, tmp_path):
         p = tmp_path / "partial.json"

@@ -117,6 +117,23 @@ class TestQuantProperties:
         err = np.abs(np.asarray(quant.dequantize(qx)) - np.asarray(x))
         assert np.all(err <= np.asarray(qx.scale) / 2 + 1e-6)
 
+    def test_all_zero_channel_has_finite_scale(self):
+        """Per-axis quantization of a tensor with an all-zero channel (a
+        pruned or conversion-dead channel) must keep every scale finite
+        and nonzero — amax=0 would otherwise make scale 0 and dequant
+        0·0/0 = NaN — and round-trip the zero channel to exact zeros."""
+        x = np.random.default_rng(0).standard_normal((6, 4)).astype(np.float32)
+        x[:, 1] = 0.0
+        qx = quant.quantize(jnp.asarray(x), axis=1)
+        scale = np.asarray(qx.scale)
+        assert np.all(np.isfinite(scale)) and np.all(scale > 0)
+        deq = np.asarray(quant.dequantize(qx))
+        assert np.all(np.isfinite(deq))
+        np.testing.assert_array_equal(deq[:, 1], 0.0)
+        # the live channels still meet the half-scale bound
+        err = np.abs(deq - x)
+        assert np.all(err <= scale / 2 + 1e-6)
+
 
 class TestAccumulator16Bit:
     """core/quant.py claims 16-bit accumulators "asserted in tests, not
