@@ -10,7 +10,9 @@ always "slower"):
 
 * ``BENCH_e2e.json``   — per-executor 1/wall_s
 * ``BENCH_e2e_96x128.json`` — same metrics at the larger 96×128 input
-* ``BENCH_serve.json`` — per-executor frames_per_s
+* ``BENCH_serve.json`` — per-executor frames_per_s, plus the load
+  generator's per-stream fps and 1/p50/p95/p99 tick latency per
+  concurrent-stream count (latency inverted so ratio < 1 is "slower")
 * ``BENCH_eval.json``  — 1/wall_s of the whole accuracy pipeline
 
 A file is only compared when its recorded ``config`` matches the
@@ -49,6 +51,20 @@ def _throughputs(name: str, data: dict, min_seconds: float) -> tuple:
         for ex, r in data.get("executors", {}).items():
             if "frames_per_s" in r:
                 out[f"{ex}.frames_per_s"] = r["frames_per_s"]
+        for n, r in data.get("load", {}).items():
+            if r.get("wall_s", 0) >= min_seconds:
+                out[f"load.{n}.per_stream_fps"] = r["per_stream_fps"]
+            else:
+                skipped.append(f"load.{n}.per_stream_fps")
+            for pct in ("p50", "p95", "p99"):
+                key = f"tick_{pct}_ms"
+                if not r.get(key):
+                    continue
+                # ms-scale ticks are timer noise, same floor as wall_s
+                if r[key] < min_seconds * 1e3:
+                    skipped.append(f"load.{n}.1/{key}")
+                else:
+                    out[f"load.{n}.1/{key}"] = 1.0 / r[key]
     elif name == "BENCH_eval.json":
         if data.get("wall_s"):
             if data["wall_s"] < min_seconds:

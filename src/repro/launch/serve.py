@@ -9,7 +9,8 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
       --requests 8 --slots 4 --max-new 16
   PYTHONPATH=src python -m repro.launch.serve --arch snn-det \
-      --requests 8 --slots 4 --frames 3 [--conv-exec gated|pallas|dense]
+      --requests 8 --slots 4 --frames 3 [--conv-exec gated|pallas|dense] \
+      [--max-queue 16 --on-full reject|shed-oldest]
   PYTHONPATH=src python -m repro.launch.serve --arch snn-det --eval-map \
       --checkpoint /tmp/snn_det_ckpt [--dataset coco:<instances.json>]
 """
@@ -24,26 +25,39 @@ import numpy as np
 
 from repro.configs import ALL_IDS, get_config, smoke_config
 from repro.models import zoo
-from repro.serve import Engine, FrameRequest, Request
+from repro.serve import AdmissionPolicy, Engine, FrameRequest, Request
+
+
+def _admission(args):
+    if args.max_queue is None:
+        return None
+    return AdmissionPolicy(max_queue=args.max_queue, on_full=args.on_full)
+
+
+def _report_rejections(eng):
+    if eng.rejected:
+        print(f"  rejected {len(eng.rejected)} requests at admission "
+              f"(rids {[r.rid for r in eng.rejected]})")
 
 
 def _serve_lm(cfg, args):
     api = zoo.get_api(cfg)
     params = api.init_params(jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, n_slots=args.slots, max_seq=args.max_seq)
+    eng = Engine(cfg, params, n_slots=args.slots, max_seq=args.max_seq,
+                 admission=_admission(args))
 
     rng = np.random.default_rng(0)
-    total = 0
     for r in range(args.requests):
         plen = int(rng.integers(3, 32))
-        total += args.max_new
         eng.submit(Request(rid=r, prompt=list(rng.integers(1, cfg.vocab_size, plen)),
                            max_new_tokens=args.max_new))
+    _report_rejections(eng)
     t0 = time.time()
     done = eng.run()
     dt = time.time() - t0
-    assert len(done) == args.requests
-    print(f"{args.arch}: served {args.requests} requests "
+    assert len(done) == args.requests - len(eng.rejected)
+    total = args.max_new * len(done)
+    print(f"{args.arch}: served {len(done)} requests "
           f"({total} new tokens) in {dt:.1f}s — {total/dt:.1f} tok/s")
     for r in sorted(done, key=lambda r: r.rid)[:3]:
         print(f"  req {r.rid}: {r.out}")
@@ -78,7 +92,7 @@ def _serve_detector(cfg, args):
         det = harness.compile_eval_detector(cfg, params, bn)
     else:
         det = sy.compile_detector(cfg, params, bn)
-    eng = Engine(det, n_slots=args.slots)
+    eng = Engine(det, n_slots=args.slots, admission=_admission(args))
     gts = None
     n_requests = args.requests
     if args.eval_map:
@@ -93,26 +107,33 @@ def _serve_detector(cfg, args):
             num_anchors=cfg.num_anchors, num_classes=cfg.num_classes,
         )
         streams = [img[None] for img in images]
-        total_frames = n_requests
     else:
         streams = synth_streams(rng, n_requests, args.frames, cfg.input_hw)
-        total_frames = n_requests * args.frames
     for r, frames in enumerate(streams):
         eng.submit(FrameRequest(rid=r, frames=frames))
+    _report_rejections(eng)
     t0 = time.time()
     done = eng.run()
     dt = time.time() - t0
-    assert len(done) == n_requests
+    assert len(done) == n_requests - len(eng.rejected)
+    total_frames = sum(len(r.out) for r in done)
     lat = step_latency_ms(eng.core.step_wall)
-    print(f"{args.arch}[{cfg.conv_exec}]: served {n_requests} streams "
+    print(f"{args.arch}[{cfg.conv_exec}]: served {len(done)} streams "
           f"({total_frames} frames) in {dt:.1f}s — {total_frames/dt:.1f} frames/s, "
-          f"step p50 {lat['step_p50_ms']:.1f}ms p95 {lat['step_p95_ms']:.1f}ms")
+          f"step p50 {lat['step_p50_ms']:.1f}ms p95 {lat['step_p95_ms']:.1f}ms "
+          f"p99 {lat['step_p99_ms']:.1f}ms")
     for r in sorted(done, key=lambda r: r.rid)[:3]:
         counts = [int(d.count) for d in r.out]
         print(f"  req {r.rid}: {len(r.out)} frames, detections/frame {counts}")
     if gts is not None:
         from repro.eval import detection_map as dm
         from repro.eval import sharded as se
+
+        if eng.rejected:
+            raise SystemExit(
+                "--eval-map scores every val image; don't bound --max-queue "
+                "below --requests"
+            )
 
         preds = [r.out[0] for r in sorted(done, key=lambda r: r.rid)]
         if args.eval_shards > 1:
@@ -186,6 +207,13 @@ def main(argv=None):
                          "--checkpoint the score uses evaluation "
                          "postprocess settings and is asserted bit-exact "
                          "against harness.evaluate_detector")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission control: bound the submit queue at this "
+                         "many waiting requests (default: unbounded)")
+    ap.add_argument("--on-full", default="reject",
+                    choices=["reject", "shed-oldest"],
+                    help="full-queue policy with --max-queue: refuse new "
+                         "requests, or shed the oldest queued ones")
     ap.add_argument("--eval-shards", type=int, default=1,
                     help="score the served detections through the "
                          "mesh-sharded mAP reduction (with --eval-map)")

@@ -184,13 +184,26 @@ def make_loss_fn(cfg: LMConfig, block_fn=dense_block):
 
 
 def make_prefill_fn(cfg: LMConfig, block_fn=dense_block, max_seq: Optional[int] = None):
-    """Prefill: run the prompt, return logits + populated KV cache."""
+    """Prefill: run the prompt, return logits + populated KV cache.
 
-    def prefill(params, tokens, extra_embeds=None):
+    ``valid_len`` supports BUCKETED prefill: tokens padded past the real
+    prompt share one compile per bucket length, the causal mask keeps
+    positions < valid_len blind to the pad, and the returned logits come
+    from position ``valid_len - 1`` (the true last prompt token) instead of
+    the padded tail. Counts the full input sequence when ``extra_embeds``
+    prefixes are present.
+    """
+
+    def prefill(params, tokens, extra_embeds=None, valid_len=None):
         logits, cache = forward(
             params, tokens, cfg, block_fn=block_fn, extra_embeds=extra_embeds, collect_kv=True
         )
-        return logits[:, -1], cache
+        if valid_len is None:
+            return logits[:, -1], cache
+        return (
+            jax.lax.dynamic_index_in_dim(logits, valid_len - 1, 1, keepdims=False),
+            cache,
+        )
 
     return prefill
 
@@ -260,9 +273,13 @@ def cached_forward(
     *,
     mlp_fn: Callable = None,
     extra_embeds: Optional[jax.Array] = None,
+    valid_len=None,
 ):
     """Prefill/decode over a carried stacked cache. Returns
-    (last-position logits (B, V), updated cache)."""
+    (last-position logits (B, V), updated cache). ``valid_len`` selects
+    position ``valid_len - 1`` instead of the last (bucketed prefill over
+    end-padded tokens — pad rows land in the cache past the prompt but the
+    serving scatter only ever copies rows [:valid_len])."""
     mlp_fn = mlp_fn or (lambda h, lp: L.mlp(h, lp["mlp"]))
     quant = isinstance(cache, QuantKVCache)
     x = L.embed_tokens(tokens, params["embed"])
@@ -335,5 +352,10 @@ def cached_forward(
         return (x, cache)
 
     x, cache = jax.lax.fori_loop(0, cfg.n_layers, body, (x, cache))
-    logits = L.logits_fn(x[:, -1:], params["embed"], cfg)
+    x_last = (
+        x[:, -1:]
+        if valid_len is None
+        else jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, 1)
+    )
+    logits = L.logits_fn(x_last, params["embed"], cfg)
     return logits[:, 0], cache

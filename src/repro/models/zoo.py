@@ -77,7 +77,7 @@ def _dense_api(cfg: LMConfig, block_fn=tfm.dense_block, layer_init=tfm.layer_ini
         fn = tfm.make_decode_fn(cfg, block_fn)
         return fn(params, cache, token, pos)
 
-    def prefill(params, tokens, extra_embeds=None):
+    def prefill(params, tokens, extra_embeds=None, valid_len=None):
         if cfg.serve_fast:
             b = tokens.shape[0]
             s = tokens.shape[1] + (extra_embeds.shape[1] if extra_embeds is not None else 0)
@@ -86,9 +86,11 @@ def _dense_api(cfg: LMConfig, block_fn=tfm.dense_block, layer_init=tfm.layer_ini
             # constant-start updates (no GSPMD dynamic-write masks)
             return tfm.cached_forward(
                 params, tokens, cfg, cache, 0,
-                mlp_fn=mlp_fn, extra_embeds=extra_embeds,
+                mlp_fn=mlp_fn, extra_embeds=extra_embeds, valid_len=valid_len,
             )
-        return tfm.make_prefill_fn(cfg, block_fn)(params, tokens, extra_embeds)
+        return tfm.make_prefill_fn(cfg, block_fn)(
+            params, tokens, extra_embeds, valid_len=valid_len
+        )
 
     return ModelAPI(
         cfg=cfg,

@@ -1,4 +1,12 @@
-from repro.serve.engine import Engine, EngineAPI, LMEngineCore, Request  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    AdmissionPolicy,
+    Engine,
+    EngineAPI,
+    EngineRunResult,
+    LMEngineCore,
+    Request,
+    SubmitResult,
+)
 from repro.serve.detector import (  # noqa: F401
     CompiledDetector,
     DetectorEngineCore,

@@ -154,7 +154,28 @@ class CompiledDetector:
             )
             return head, aux["membrane"], dets
 
+        def _masked(params, bn, frames, mem, active, cold):
+            # masked cold-start reset: rows joining this tick start from a
+            # zero membrane INSIDE the jitted step — admission never issues
+            # eager per-leaf device scatters
+            def blank(v):
+                m = cold.reshape((-1,) + (1,) * (v.ndim - 1))
+                return jnp.where(m, jnp.zeros((), v.dtype), v)
+
+            mem0 = jax.tree_util.tree_map(blank, mem)
+            head, new_mem, dets = _step(params, bn, frames, mem0)
+
+            # inactive rows are dead lanes in the megabatch: their compute
+            # is discarded and their membrane must NOT evolve between
+            # occupants — keep the old state wherever active is False
+            def keep(new, old):
+                m = active.reshape((-1,) + (1,) * (new.ndim - 1))
+                return jnp.where(m, new, old)
+
+            return head, jax.tree_util.tree_map(keep, new_mem, mem0), dets
+
         self._step = jax.jit(_step)
+        self._masked_step_fn = jax.jit(_masked)
 
     @property
     def plan(self):
@@ -201,6 +222,26 @@ class CompiledDetector:
             self.params, self.bn_state, jnp.asarray(frames), None
         )
         return dets, head
+
+    def masked_step(self, frames, mem, active, cold=None):
+        """One megabatched serving tick over a capacity bucket of streams.
+
+        ``frames``: (C, H, W, 3); ``mem``: membrane pytree with C rows;
+        ``active``: (C,) bool — rows where it is False are padding lanes
+        whose outputs are discarded and whose membrane stays EXACTLY as it
+        was (bit-identical active-row outputs regardless of what the dead
+        lanes hold); ``cold``: (C,) bool — rows joining this tick, whose
+        membrane is zeroed INSIDE the step (masked cold-start reset) so
+        admission never touches device state eagerly. Returns ``(head,
+        new_mem, detections)``. Jitted once per capacity bucket, never per
+        occupancy.
+        """
+        self.check_plan()
+        if cold is None:
+            cold = jnp.zeros(jnp.shape(active), bool)
+        return self._masked_step_fn(
+            self.params, self.bn_state, frames, mem, active, cold
+        )
 
     # ----------------------------------------------------------- sessions --
     def zero_state(self, batch: int):
@@ -306,12 +347,13 @@ def synth_streams(rng, n_streams: int, n_frames: int, hw) -> list:
 
 
 def step_latency_ms(step_wall: list) -> dict:
-    """p50/p95 of the engine's per-tick session-step latency, first tick
-    (jit warmup) excluded."""
+    """p50/p95/p99 of the engine's per-tick session-step latency, first
+    tick (jit warmup) excluded."""
     wall = np.asarray(step_wall[1:] or step_wall)
     return {
         "step_p50_ms": float(np.percentile(wall, 50) * 1e3),
         "step_p95_ms": float(np.percentile(wall, 95) * 1e3),
+        "step_p99_ms": float(np.percentile(wall, 99) * 1e3),
     }
 
 
@@ -329,49 +371,209 @@ class FrameRequest:
     done: bool = False
 
 
-class DetectorEngineCore:
-    """EngineAPI backend: continuous batching of frame streams over a
-    batch-of-sessions. Slot i of the pool is stream i of one vectorized
-    :class:`DetectorSession`; admission cold-starts that row, every engine
-    tick advances ALL active streams with one batched session step."""
+def _pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
 
-    def __init__(self, det: CompiledDetector, *, n_slots: int = 8):
+
+class DetectorEngineCore:
+    """EngineAPI backend: megabatched continuous-stream detector serving.
+
+    Every engine tick advances ALL active streams as ONE device-resident
+    megabatch:
+
+    * Membrane/accumulator state lives on device across ticks (threaded
+      through ``forward(membrane=)`` inside the compile-once handle), never
+      staged through the host.
+    * The pool is sized in power-of-two CAPACITY BUCKETS: the masked step
+      jits once per bucket shape, so a 1000-stream workload compiles
+      O(log n_slots) step functions total — never one per occupancy.
+    * Join/leave remaps slot rows without recompiling OR eager device work:
+      admission claims the lowest free row and marks it for a masked
+      cold-start reset applied INSIDE the next jitted step; retirement just
+      frees the row (the stale membrane is invisible behind the active
+      mask). The only per-leaf device ops left are the rare bucket
+      grow/shrink events — shrink compacts surviving rows below the new
+      capacity with one gather.
+    * Inactive bucket lanes are masked out of the step — their membrane is
+      bit-frozen between occupants instead of evolving under blank frames —
+      and a fully drained pool dispatches nothing at all.
+    * Postprocess/NMS runs batched inside the same jitted step, and the
+      next tick's frame upload double-buffers against this tick's compute
+      (async dispatch; steady-state only, since a finishing stream remaps
+      the batch layout).
+    """
+
+    def __init__(self, det: CompiledDetector, *, n_slots: int = 8,
+                 min_bucket: int = 8):
         self.det = det
         self.n_slots = n_slots
-        self.session = det.new_session(batch=n_slots)
+        self.min_bucket = min(min_bucket, n_slots)
         h, w = det.cfg.input_hw
-        self._blank = np.zeros((h, w, 3), np.float32)
-        self._cursor = [0] * n_slots
+        self._hw = (h, w)
+        # row table over the capacity bucket: _rows[row] -> engine slot or
+        # None (free lane), _row_of[slot] -> row, _cursor[slot] -> next
+        # frame index, _cold -> rows whose membrane must be zeroed by the
+        # next step's masked cold-start reset.
+        self._row_of: dict[int, int] = {}
+        self._cursor: dict[int, int] = {}
+        self._cold: set[int] = set()
+        self.cap = self._bucket_for(0)
+        self._rows: list[Optional[int]] = [None] * self.cap
+        self._mem = det.zero_state(self.cap)  # device-resident across ticks
+        self._staged = None  # (device frames, signature): double-buffered upload
         self.step_wall: list[float] = []  # per-tick latency (BENCH_serve)
+
+    def _bucket_for(self, n: int) -> int:
+        return min(self.n_slots, max(self.min_bucket, _pow2(max(n, 1))))
+
+    # ---------------------------------------------------------- admission --
+    def validate(self, req: FrameRequest) -> Optional[str]:
+        """None if ``req`` is servable, else the rejection reason — checked
+        by ``Engine.submit`` (typed rejection) and again by :meth:`admit`
+        BEFORE any slot/membrane state is touched."""
+        frames = np.asarray(req.frames)
+        h, w = self._hw
+        if frames.ndim != 4 or frames.shape[0] < 1:
+            return (
+                f"FrameRequest.frames must be (F, H, W, 3) with F >= 1; "
+                f"got {frames.shape}"
+            )
+        if frames.shape[1:] != (h, w, 3):
+            return (
+                f"FrameRequest.frames must be (F, {h}, {w}, 3) to match "
+                f"the compiled detector's cfg.input_hw={self._hw}; "
+                f"got {frames.shape}"
+            )
+        return None
 
     def admit(self, req: FrameRequest, slot_idx: int) -> None:
         req.frames = np.asarray(req.frames, np.float32)
-        if req.frames.ndim != 4 or req.frames.shape[0] < 1:
-            raise ValueError(
-                f"FrameRequest.frames must be (F, H, W, 3) with F >= 1; "
-                f"got {req.frames.shape}"
-            )
-        self.session.reset(slot_idx)  # new stream: cold membrane state
+        err = self.validate(req)
+        if err is not None:  # reject BEFORE touching any session state
+            raise ValueError(err)
+        if len(self._row_of) == self.cap:  # bucket full: grow, don't re-jit
+            self._grow(self._bucket_for(len(self._row_of) + 1))
+        row = self._rows.index(None)  # lowest free lane
+        self._rows[row] = slot_idx
+        self._row_of[slot_idx] = row
         self._cursor[slot_idx] = 0
+        # masked cold-start reset: the row is zeroed inside the NEXT jitted
+        # step — join issues zero device ops and never recompiles
+        self._cold.add(row)
 
-    def step(self, active: dict[int, FrameRequest]) -> list[int]:
-        batch = np.stack(
-            [
-                active[i].frames[self._cursor[i]] if i in active else self._blank
-                for i in range(self.n_slots)
-            ]
+    # --------------------------------------------------------- row plumbing --
+    def _grow(self, new_cap: int) -> None:
+        pad = new_cap - self.cap
+        self._mem = jax.tree_util.tree_map(
+            lambda v: jnp.concatenate(
+                [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)]
+            ),
+            self._mem,
         )
+        self._rows.extend([None] * pad)
+        self.cap = new_cap
+
+    def _shrink(self, new_cap: int) -> None:
+        """Compact surviving rows below ``new_cap`` with ONE gather per
+        membrane leaf, then slice the bucket. Only called on the rare
+        occupancy-halved events — per-tick join/leave is pure bookkeeping."""
+        perm = list(range(new_cap))
+        free = [r for r in range(new_cap) if self._rows[r] is None]
+        for r in range(new_cap, self.cap):
+            slot = self._rows[r]
+            if slot is None:
+                continue
+            dst = free.pop(0)
+            perm[dst] = r
+            self._rows[dst] = slot
+            self._row_of[slot] = dst
+        idx = jnp.asarray(perm)
+        self._mem = jax.tree_util.tree_map(lambda v: v[idx], self._mem)
+        self._rows = self._rows[:new_cap]
+        self.cap = new_cap
+
+    def _retire(self, slot: int) -> None:
+        """Free ``slot``'s row. No device work: the stale membrane left in
+        the lane is invisible behind the active mask, and a future occupant
+        cold-starts it inside the step."""
+        row = self._row_of.pop(slot)
+        self._rows[row] = None
+        self._cold.discard(row)
+        del self._cursor[slot]
+
+    def _occupied(self):
+        return [(r, s) for r, s in enumerate(self._rows) if s is not None]
+
+    def _signature(self, cursor_offset: int = 0):
+        """Identity of one tick's frame batch: capacity + (row, slot, frame
+        index) per occupied lane. The staged (double-buffered) upload is
+        only used when its signature matches the tick it was staged for —
+        any admission, retirement or remap misses and reassembles."""
+        return (
+            self.cap,
+            tuple((r, s, self._cursor[s] + cursor_offset)
+                  for r, s in self._occupied()),
+        )
+
+    def _assemble(self, active: dict[int, FrameRequest], offset: int = 0):
+        h, w = self._hw
+        batch = np.zeros((self.cap, h, w, 3), np.float32)
+        for row, slot in self._occupied():
+            batch[row] = active[slot].frames[self._cursor[slot] + offset]
+        return batch
+
+    # --------------------------------------------------------------- tick --
+    def step(self, active: dict[int, FrameRequest]) -> list[int]:
+        if not self._row_of:  # fully drained pool: zero-cost skip
+            return []
         t0 = time.perf_counter()
-        dets, head = self.session.step(jnp.asarray(batch))
+        sig = self._signature()
+        if self._staged is not None and self._staged[1] == sig:
+            frames_dev = self._staged[0]  # pre-uploaded last tick
+        else:
+            frames_dev = jnp.asarray(self._assemble(active))
+        self._staged = None
+        mask = np.zeros((self.cap,), bool)
+        cold = np.zeros((self.cap,), bool)
+        for row, _ in self._occupied():
+            mask[row] = True
+        for row in self._cold:
+            cold[row] = True
+        self._cold.clear()
+        head, new_mem, dets = self.det.masked_step(
+            frames_dev, self._mem, jnp.asarray(mask), jnp.asarray(cold)
+        )
+        # double-buffer: while the device chews on this tick, stage the
+        # NEXT tick's upload. Steady state only — a finishing stream would
+        # remap rows and invalidate the layout (the signature check above
+        # would reject it anyway; skipping saves the wasted copy).
+        if all(
+            self._cursor[s] + 1 < len(active[s].frames) for s in self._row_of
+        ):
+            self._staged = (
+                jax.device_put(jnp.asarray(self._assemble(active, offset=1))),
+                self._signature(cursor_offset=1),
+            )
         jax.block_until_ready(head)
         self.step_wall.append(time.perf_counter() - t0)
+
         head_np = np.asarray(head)
         dets_np = jax.tree_util.tree_map(np.asarray, dets)  # one transfer/field
+        self._mem = new_mem
         finished = []
-        for i, req in active.items():
-            req.out.append(dets_np.row(i))
-            req.heads.append(head_np[i])
-            self._cursor[i] += 1
-            if self._cursor[i] >= len(req.frames):
-                finished.append(i)
+        for row, slot in self._occupied():
+            req = active[slot]
+            req.out.append(dets_np.row(row))
+            req.heads.append(head_np[row])
+            self._cursor[slot] += 1
+            if self._cursor[slot] >= len(req.frames):
+                finished.append(slot)
+        for slot in finished:
+            self._retire(slot)
+        new_cap = self._bucket_for(len(self._row_of))
+        if new_cap < self.cap:
+            self._shrink(new_cap)
         return finished

@@ -55,6 +55,74 @@ class Request:
     done: bool = False
 
 
+# ------------------------------------------------------ admission control --
+
+
+@dataclass(frozen=True)
+class AdmissionPolicy:
+    """Backpressure contract for :meth:`Engine.submit`.
+
+    ``max_queue`` bounds the number of QUEUED (not yet admitted) requests;
+    ``None`` keeps the legacy unbounded queue. When the queue is full,
+    ``on_full`` picks the policy:
+
+    * ``"reject"`` — refuse the new request (it never enters the queue).
+    * ``"shed-oldest"`` — evict queued requests from the FRONT until the
+      new one fits (freshest traffic wins; a camera fleet cares about the
+      latest frames, not a stale backlog).
+
+    Either way the caller gets a typed :class:`SubmitResult` instead of
+    silent queue growth, and every refused/evicted request lands in
+    ``Engine.rejected`` with ``done=False``.
+    """
+
+    max_queue: Optional[int] = None
+    on_full: str = "reject"
+
+    def __post_init__(self):
+        if self.on_full not in ("reject", "shed-oldest"):
+            raise ValueError(
+                f"on_full={self.on_full!r}: want 'reject' or 'shed-oldest'"
+            )
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+
+
+@dataclass(frozen=True)
+class SubmitResult:
+    """Typed outcome of one :meth:`Engine.submit` call. Truthy iff the
+    request was accepted; ``reason`` explains a rejection (``"queue-full"``
+    / ``"invalid: ..."``); ``shed`` lists requests evicted to make room
+    under the shed-oldest policy."""
+
+    accepted: bool
+    reason: Optional[str] = None
+    shed: tuple = ()
+
+    def __bool__(self) -> bool:
+        return self.accepted
+
+
+class EngineRunResult(list):
+    """`Engine.run`'s return value: the finished-request list (it IS a
+    list, so existing callers keep working) plus the drain status.
+
+    * ``status`` — ``"drained"`` (queue and slots empty) or ``"truncated"``
+      (``max_steps`` exhausted with work left).
+    * ``pending`` — requests that did NOT finish: in-flight slot occupants
+      first, then the still-queued tail, every one with ``done=False``.
+    """
+
+    def __init__(self, finished, status: str, pending):
+        super().__init__(finished)
+        self.status = status
+        self.pending = list(pending)
+
+    @property
+    def drained(self) -> bool:
+        return self.status == "drained"
+
+
 @runtime_checkable
 class EngineAPI(Protocol):
     """Backend contract for the slot/admission loop.
@@ -89,20 +157,39 @@ class LMEngineCore:
         self.cache = self.api.init_cache(n_slots, max_seq)
         self._decode = jax.jit(self.api.decode_fn)
         self._prefill_cache = {}
+        # bucketed prefill (pad + valid_len mask) holds for families whose
+        # prefill cache is positionally sliceable — the causal mask keeps
+        # positions < plen blind to the pad, and _scatter_kv only ever
+        # copies rows [:plen] into the shared cache. Recurrent-state
+        # families (ssm/hybrid) fold the whole padded sequence into their
+        # O(1) state, so they keep exact-length prefill.
+        self._bucketed = (
+            getattr(cfg, "family", None) in ("dense", "moe")
+            and not getattr(cfg, "kv_quant", False)
+        )
 
     # ------------------------------------------------------------ prefill --
-    def _prefill_fn(self, plen: int):
-        # one jit entry per distinct prompt length; production would bucket
-        # (pad + mask) — exact-length keeps the first-token logits trivially
-        # correct and the test/examples workload has few distinct lengths.
-        if plen not in self._prefill_cache:
-            self._prefill_cache[plen] = jax.jit(self.api.prefill_fn)
-        return self._prefill_cache[plen]
+    def _prefill_fn(self, length: int):
+        # one jit entry per BUCKET (pad + valid_len mask): the compile
+        # cache is O(log max-prompt-len) under varied traffic instead of
+        # one entry per exact prompt length. Non-bucketable families key
+        # by exact length (their traffic decides the cache size).
+        if length not in self._prefill_cache:
+            self._prefill_cache[length] = jax.jit(self.api.prefill_fn)
+        return self._prefill_cache[length]
 
     def admit(self, req: Request, slot_idx: int):
         plen = len(req.prompt)
-        toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
-        logits, pcache = self._prefill_fn(plen)(self.params, toks)
+        if self._bucketed:
+            blen = _bucket(plen)
+            padded = np.zeros((1, blen), np.int32)
+            padded[0, :plen] = np.asarray(req.prompt, np.int32)
+            logits, pcache = self._prefill_fn(blen)(
+                self.params, jnp.asarray(padded), valid_len=jnp.int32(plen)
+            )
+        else:
+            toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+            logits, pcache = self._prefill_fn(plen)(self.params, toks)
         tok = int(jnp.argmax(logits[0]))
         req.out.append(tok)
         self._scatter_kv(pcache, slot_idx, plen)
@@ -200,29 +287,63 @@ def _resolve_core(cfg, params, *, n_slots, max_seq, greedy) -> EngineAPI:
 
 
 class Engine:
-    """The workload-agnostic slot/admission loop over an EngineAPI core."""
+    """The workload-agnostic slot/admission loop over an EngineAPI core.
+
+    ``admission`` bounds the queue (:class:`AdmissionPolicy`); ``submit``
+    returns a typed :class:`SubmitResult` so callers see rejection/shedding
+    instead of silent growth, and ``run`` reports whether the loop drained
+    or truncated (:class:`EngineRunResult`).
+    """
 
     def __init__(self, cfg=None, params=None, *, n_slots: int = 8,
                  max_seq: int = 512, greedy: bool = True,
-                 core: Optional[EngineAPI] = None):
+                 core: Optional[EngineAPI] = None,
+                 admission: Optional[AdmissionPolicy] = None):
         self.core = core if core is not None else _resolve_core(
             cfg, params, n_slots=n_slots, max_seq=max_seq, greedy=greedy
         )
         self.cfg = cfg
+        self.admission = admission if admission is not None else AdmissionPolicy()
         self.n_slots = self.core.n_slots
         self.slots: list[Optional[Any]] = [None] * self.n_slots
         self.queue: list[Any] = []
         self.finished: list[Any] = []
+        self.rejected: list[Any] = []  # refused/evicted requests (done=False)
 
-    def submit(self, req):
+    def submit(self, req) -> SubmitResult:
+        # reject malformed requests BEFORE they enter the queue: a bad
+        # request discovered mid-run would otherwise abort the whole loop
+        # (cores still validate again at admit time for direct-admit users)
+        validate = getattr(self.core, "validate", None)
+        if validate is not None:
+            err = validate(req)
+            if err is not None:
+                self.rejected.append(req)
+                return SubmitResult(False, reason=f"invalid: {err}")
+        pol = self.admission
+        if pol.max_queue is not None and len(self.queue) >= pol.max_queue:
+            if pol.on_full == "reject":
+                self.rejected.append(req)
+                return SubmitResult(False, reason="queue-full")
+            shed = []  # shed-oldest: evict the stale front, keep the fresh
+            while len(self.queue) >= pol.max_queue:
+                shed.append(self.queue.pop(0))
+            self.rejected.extend(shed)
+            self.queue.append(req)
+            return SubmitResult(True, reason="shed-oldest", shed=tuple(shed))
         self.queue.append(req)
+        return SubmitResult(True)
 
     def _active(self) -> dict[int, Any]:
         return {i: r for i, r in enumerate(self.slots) if r is not None}
 
-    def run(self, max_steps: int = 10_000):
+    def run(self, max_steps: int = 10_000) -> EngineRunResult:
         """Continuous-batching loop: admit from queue into free slots, then
-        step all active slots together; repeat until drained."""
+        step all active slots together; repeat until drained (or until
+        ``max_steps``, in which case the result's ``status`` is
+        ``"truncated"`` and ``pending`` lists every undone request —
+        in-flight occupants keep their slot state, so a later ``run()``
+        resumes them)."""
         steps = 0
         while (self.queue or any(r is not None for r in self.slots)) and steps < max_steps:
             for i in range(self.n_slots):
@@ -237,4 +358,7 @@ class Engine:
                     self.finished.append(self.slots[i])
                     self.slots[i] = None
             steps += 1
-        return self.finished
+        pending = [r for r in self.slots if r is not None] + list(self.queue)
+        return EngineRunResult(
+            self.finished, "truncated" if pending else "drained", pending
+        )

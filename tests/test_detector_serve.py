@@ -17,6 +17,7 @@ from repro.core import pruning
 from repro.models import snn_yolo as sy
 from repro.models.postprocess import Detections
 from repro.serve import (
+    AdmissionPolicy,
     CompiledDetector,
     DetectorEngineCore,
     Engine,
@@ -25,6 +26,7 @@ from repro.serve import (
     LMEngineCore,
     StalePlanError,
 )
+from repro.serve.detector import step_latency_ms
 
 
 @pytest.fixture(scope="module")
@@ -291,13 +293,255 @@ class TestFrameServing:
         assert isinstance(DetectorEngineCore(det, n_slots=2), EngineAPI)
         assert issubclass(LMEngineCore, object) and hasattr(LMEngineCore, "admit")
 
-    def test_bad_frames_rejected_at_admission(self, det, setup):
+    def test_bad_frames_rejected_at_submit(self, det, setup):
+        """Malformed requests get a typed rejection at submit — they never
+        enter the queue, so the run loop never sees them."""
         _, _, _, frames = setup
         eng = Engine(det, n_slots=2)
-        eng.submit(FrameRequest(rid=0, frames=np.zeros((8, 8, 3))))  # no F axis
-        with pytest.raises(ValueError, match="FrameRequest"):
-            eng.run()
+        res = eng.submit(FrameRequest(rid=0, frames=np.zeros((8, 8, 3))))  # no F axis
+        assert not res and not res.accepted
+        assert "FrameRequest" in res.reason
+        assert eng.queue == [] and eng.rejected[0].rid == 0
+        out = eng.run()
+        assert out.status == "drained" and len(out) == 0
+
+    def test_mismatched_hw_rejected_before_touching_state(self, det, setup):
+        """Regression: a FrameRequest whose H/W/channels don't match
+        cfg.input_hw used to reset the slot's membrane and then explode
+        later inside the batched step with an unrelated np.stack error.
+        admit must validate FIRST and leave all state untouched."""
+        cfg, _, _, frames = setup
+        core = DetectorEngineCore(det, n_slots=2)
+        h, w = cfg.input_hw
+        good = FrameRequest(rid=0, frames=np.zeros((2, h, w, 3), np.float32))
+        core.admit(good, 0)
+        mem_before = jax.tree_util.tree_map(np.asarray, core._mem)
+        rows_before = (dict(core._row_of), list(core._rows), set(core._cold))
+        bad = FrameRequest(rid=1, frames=np.zeros((2, h + 2, w, 3), np.float32))
+        with pytest.raises(ValueError, match="input_hw"):
+            core.admit(bad, 1)
+        assert (dict(core._row_of), list(core._rows), set(core._cold)) == rows_before
+        for a, b in zip(
+            jax.tree_util.tree_leaves(mem_before),
+            jax.tree_util.tree_leaves(
+                jax.tree_util.tree_map(np.asarray, core._mem)
+            ),
+        ):
+            np.testing.assert_array_equal(a, b)
+        # wrong channel count is caught too
+        with pytest.raises(ValueError, match="input_hw"):
+            core.admit(
+                FrameRequest(rid=2, frames=np.zeros((2, h, w, 1), np.float32)), 1
+            )
 
     def test_engine_rejects_unknown_config(self):
         with pytest.raises(TypeError, match="serve"):
             Engine(object(), None)
+
+
+class TestMegabatchServing:
+    """The megabatched continuous-stream core: capacity buckets, join/leave
+    row remapping, inactive-lane masking, double-buffered upload — all
+    pinned bit-identical to independent single-stream DetectorSessions."""
+
+    def _streams(self, cfg, lengths, seed=11):
+        rng = np.random.default_rng(seed)
+        h, w = cfg.input_hw
+        return [
+            (rng.integers(0, 256, (f, h, w, 3)) / 255.0).astype(np.float32)
+            for f in lengths
+        ]
+
+    def _solo_replay(self, det, frames):
+        solo = det.new_session(batch=1)
+        return [np.asarray(solo.step(f[None]).head[0]) for f in frames]
+
+    def test_join_leave_remap_parity_vs_solo_sessions(self, det, setup):
+        """Staggered stream lengths + fewer slots than requests: every
+        tick sees joins/leaves, rows swap-remove and the capacity bucket
+        grows and shrinks — and every served head must STILL be
+        bit-identical to an independent single-stream session replay."""
+        cfg, _, _, _ = setup
+        lengths = [1, 4, 2, 5, 3, 1, 2, 6, 1, 3]
+        streams = self._streams(cfg, lengths)
+        eng = Engine(det, n_slots=4)
+        reqs = [FrameRequest(rid=r, frames=s) for r, s in enumerate(streams)]
+        for fr in reqs:
+            assert eng.submit(fr)
+        out = eng.run()
+        assert out.status == "drained" and len(out) == len(lengths)
+        for fr in reqs:
+            assert len(fr.heads) == len(fr.frames)
+            for served, ref in zip(fr.heads, self._solo_replay(det, fr.frames)):
+                np.testing.assert_array_equal(served, ref)
+
+    def test_capacity_buckets_grow_and_shrink_without_losing_state(self, det, setup):
+        """Crossing a bucket boundary (pad) and draining back down
+        (shrink) must preserve resident rows bit-exactly."""
+        cfg, _, _, _ = setup
+        core = DetectorEngineCore(det, n_slots=16, min_bucket=2)
+        assert core.cap == 2
+        streams = self._streams(cfg, [6] * 5 + [2] * 2)
+        reqs = [FrameRequest(rid=r, frames=s) for r, s in enumerate(streams)]
+        # two long streams fill the min bucket...
+        core.admit(reqs[0], 0)
+        core.admit(reqs[1], 1)
+        active = {0: reqs[0], 1: reqs[1]}
+        core.step(active)
+        assert core.cap == 2
+        # ...then three more force growth 2 -> 4 -> 8
+        for slot, r in [(2, reqs[2]), (3, reqs[3]), (4, reqs[4])]:
+            core.admit(r, slot)
+            active[slot] = r
+        assert core.cap == 8
+        while active:
+            for slot in core.step(active):
+                del active[slot]
+        assert core.cap == 2  # drained back to the min bucket
+        for fr in reqs[:5]:
+            for served, ref in zip(fr.heads, self._solo_replay(det, fr.frames)):
+                np.testing.assert_array_equal(served, ref)
+
+    def test_inactive_lanes_masked_out_of_the_step(self, det, setup):
+        """Satellite: dead bucket lanes must not evolve membrane between
+        occupants, and active-row outputs must be bit-identical no matter
+        what the dead lanes hold."""
+        cfg, _, _, frames = setup
+        mem = det.zero_state(4)
+        active = np.array([True, True, False, False])
+        batch = np.zeros((4,) + frames[0].shape[1:], np.float32)
+        batch[:2] = np.asarray(frames[0])
+        h1, m1, _ = det.masked_step(
+            jnp.asarray(batch), mem, jnp.asarray(active)
+        )
+        # same active rows, garbage in the dead lanes
+        garbage = batch.copy()
+        garbage[2:] = 0.7
+        h2, m2, _ = det.masked_step(
+            jnp.asarray(garbage), mem, jnp.asarray(active)
+        )
+        np.testing.assert_array_equal(np.asarray(h1[:2]), np.asarray(h2[:2]))
+        for a, b in zip(
+            jax.tree_util.tree_leaves(m1), jax.tree_util.tree_leaves(m2)
+        ):
+            np.testing.assert_array_equal(np.asarray(a[:2]), np.asarray(b[:2]))
+            # dead lanes: membrane frozen at its prior (zero) state
+            assert float(jnp.abs(a[2:]).max()) == 0.0
+            assert float(jnp.abs(b[2:]).max()) == 0.0
+
+    def test_cold_mask_resets_a_dirty_lane_in_step(self, det, setup):
+        """Satellite: the masked cold-start reset happens INSIDE the jitted
+        step — a lane holding a retired stream's stale membrane must serve
+        its new occupant bit-identically to an explicitly zeroed lane."""
+        cfg, _, _, frames = setup
+        batch = np.asarray(frames[0][:1])
+        batch = np.concatenate([batch, batch], axis=0)  # rows 0 and 1 alike
+        active = jnp.asarray(np.array([True, True]))
+        no_cold = jnp.asarray(np.zeros(2, bool))
+        # dirty both rows' membrane, then re-serve with row 1 marked cold
+        _, dirty, _ = det.masked_step(
+            jnp.asarray(batch), det.zero_state(2), active
+        )
+        h_cold, m_cold, _ = det.masked_step(
+            jnp.asarray(batch), dirty, active,
+            jnp.asarray(np.array([False, True])),
+        )
+        # reference: row 1 explicitly zeroed before the step
+        zeroed = jax.tree_util.tree_map(lambda v: v.at[1].set(0.0), dirty)
+        h_ref, m_ref, _ = det.masked_step(
+            jnp.asarray(batch), zeroed, active, no_cold
+        )
+        np.testing.assert_array_equal(np.asarray(h_cold), np.asarray(h_ref))
+        for a, b in zip(
+            jax.tree_util.tree_leaves(m_cold), jax.tree_util.tree_leaves(m_ref)
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_double_buffered_upload_changes_nothing(self, det, setup):
+        """The staged next-tick upload is a pure latency optimization: a
+        long steady-state stream (staging hits every tick) must serve
+        bit-identically to the solo replay."""
+        cfg, _, _, _ = setup
+        (stream,) = self._streams(cfg, [6])
+        eng = Engine(det, n_slots=2)
+        fr = FrameRequest(rid=0, frames=stream)
+        eng.submit(fr)
+        eng.run()
+        for served, ref in zip(fr.heads, self._solo_replay(det, stream)):
+            np.testing.assert_array_equal(served, ref)
+
+    def test_run_truncation_reports_pending(self, det, setup):
+        """Satellite regression: run(max_steps) exhaustion used to drop
+        queued and in-flight requests silently — they appeared in neither
+        finished nor any error. Now the result says 'truncated' and lists
+        every undone request, and a later run() resumes them."""
+        cfg, _, _, _ = setup
+        streams = self._streams(cfg, [4, 4, 4])
+        eng = Engine(det, n_slots=2)
+        reqs = [FrameRequest(rid=r, frames=s) for r, s in enumerate(streams)]
+        for fr in reqs:
+            eng.submit(fr)
+        out = eng.run(max_steps=2)
+        assert out.status == "truncated" and not out.drained
+        assert len(out) == 0  # nothing finished in 2 ticks of 4-frame streams
+        assert {r.rid for r in out.pending} == {0, 1, 2}
+        assert all(not r.done for r in out.pending)
+        # resume: in-flight slot state survived, everything drains
+        out2 = eng.run()
+        assert out2.status == "drained" and {r.rid for r in out2} == {0, 1, 2}
+        for fr in reqs:  # and the interrupted run didn't corrupt anything
+            for served, ref in zip(fr.heads, self._solo_replay(det, fr.frames)):
+                np.testing.assert_array_equal(served, ref)
+
+    def test_bounded_queue_rejects(self, det, setup):
+        cfg, _, _, _ = setup
+        streams = self._streams(cfg, [2] * 5)
+        eng = Engine(
+            det, n_slots=2, admission=AdmissionPolicy(max_queue=2)
+        )
+        results = [
+            eng.submit(FrameRequest(rid=r, frames=s))
+            for r, s in enumerate(streams)
+        ]
+        assert [bool(r) for r in results] == [True, True, False, False, False]
+        assert all(r.reason == "queue-full" for r in results[2:])
+        assert [r.rid for r in eng.rejected] == [2, 3, 4]
+        out = eng.run()
+        assert out.status == "drained" and {r.rid for r in out} == {0, 1}
+
+    def test_shed_oldest_keeps_fresh_traffic(self, det, setup):
+        cfg, _, _, _ = setup
+        streams = self._streams(cfg, [2] * 5)
+        eng = Engine(
+            det,
+            n_slots=2,
+            admission=AdmissionPolicy(max_queue=2, on_full="shed-oldest"),
+        )
+        reqs = [FrameRequest(rid=r, frames=s) for r, s in enumerate(streams)]
+        r0, r1 = eng.submit(reqs[0]), eng.submit(reqs[1])
+        assert r0 and r1 and r0.shed == ()
+        r2 = eng.submit(reqs[2])  # queue full: rid 0 (oldest) is shed
+        assert r2 and r2.reason == "shed-oldest"
+        assert tuple(r.rid for r in r2.shed) == (0,)
+        assert [r.rid for r in eng.queue] == [1, 2]
+        out = eng.run()
+        assert {r.rid for r in out} == {1, 2}
+        assert not reqs[0].done
+
+    def test_admission_policy_validates(self):
+        with pytest.raises(ValueError, match="on_full"):
+            AdmissionPolicy(on_full="drop-newest")
+        with pytest.raises(ValueError, match="max_queue"):
+            AdmissionPolicy(max_queue=0)
+
+    def test_step_latency_percentiles_over_synthetic_load(self, det, setup):
+        cfg, _, _, _ = setup
+        streams = self._streams(cfg, [3] * 6)
+        eng = Engine(det, n_slots=4)
+        for r, s in enumerate(streams):
+            eng.submit(FrameRequest(rid=r, frames=s))
+        eng.run()
+        lat = step_latency_ms(eng.core.step_wall)
+        assert set(lat) == {"step_p50_ms", "step_p95_ms", "step_p99_ms"}
+        assert 0 < lat["step_p50_ms"] <= lat["step_p95_ms"] <= lat["step_p99_ms"]
+        assert len(eng.core.step_wall) >= 3

@@ -69,6 +69,97 @@ def test_slot_reuse():
     assert len(done) == 3  # single slot recycled three times
 
 
+def test_prefill_bucketing_bounds_compile_cache():
+    """Satellite regression: _prefill_cache used to hold one jit entry per
+    EXACT prompt length (unbounded under varied traffic). Bucketed pad+mask
+    prefill keeps one entry per power-of-two bucket — and every request
+    still decodes exactly like the sequential oracle."""
+    cfg = smoke_config(get_config("qwen1.5-0.5b"))
+    api = zoo.get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(5))
+    eng = Engine(cfg, params, n_slots=3, max_seq=64)
+    rng = np.random.default_rng(3)
+    lengths = [3, 4, 5, 6, 7, 9, 11, 13, 17, 21]  # 10 distinct lengths
+    prompts = [list(rng.integers(1, cfg.vocab_size, n)) for n in lengths]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=5))
+    done = eng.run()
+    assert done.status == "drained" and len(done) == len(prompts)
+    # lengths <= 16 share one bucket, 17/21 share the 32 bucket
+    assert sorted(eng.core._prefill_cache) == [16, 32]
+    batched = {r.rid: r.out for r in done}
+    for i, p in enumerate(prompts):
+        assert batched[i] == _sequential_decode(api, params, p, 5, max_seq=64)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "olmoe-1b-7b"])
+@pytest.mark.parametrize("serve_fast", [True, False])
+def test_bucketed_prefill_first_token_logits_bit_exact(arch, serve_fast):
+    """Pad+mask prefill at a bucketed length must reproduce the
+    exact-length prefill BIT-exactly: first-token logits AND the prompt's
+    cache rows (the only rows the engine ever scatters)."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        smoke_config(get_config(arch)), serve_fast=serve_fast
+    )
+    api = zoo.get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    prompt = [5, 9, 2, 11, 4]
+    plen = len(prompt)
+    exact_logits, exact_cache = api.prefill_fn(
+        params, jnp.asarray(np.asarray(prompt, np.int32)[None])
+    )
+    padded = np.zeros((1, 16), np.int32)
+    padded[0, :plen] = prompt
+    bucket_logits, bucket_cache = api.prefill_fn(
+        params, jnp.asarray(padded), valid_len=jnp.int32(plen)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(exact_logits), np.asarray(bucket_logits)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(exact_cache.k[:, :, :plen], np.float32),
+        np.asarray(bucket_cache.k[:, :, :plen], np.float32),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(exact_cache.v[:, :, :plen], np.float32),
+        np.asarray(bucket_cache.v[:, :, :plen], np.float32),
+    )
+
+
+def test_recurrent_families_keep_exact_length_prefill():
+    """ssm/hybrid prefill folds the whole padded sequence into O(1) state,
+    so bucketing would contaminate it — they stay exact-length."""
+    cfg = smoke_config(get_config("rwkv6-3b"))
+    api = zoo.get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, n_slots=2, max_seq=32)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=3))
+    eng.submit(Request(rid=1, prompt=[4, 5, 6, 7], max_new_tokens=3))
+    done = eng.run()
+    assert len(done) == 2
+    assert not eng.core._bucketed
+    assert sorted(eng.core._prefill_cache) == [3, 4]  # exact lengths
+
+
+def test_lm_run_truncation_reports_pending():
+    """max_steps exhaustion surfaces queued AND in-flight requests in
+    .pending with done=False instead of dropping them silently."""
+    cfg = smoke_config(get_config("qwen1.5-0.5b"))
+    api = zoo.get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, n_slots=1, max_seq=32)
+    for r in range(3):
+        eng.submit(Request(rid=r, prompt=[1 + r, 2, 3], max_new_tokens=8))
+    out = eng.run(max_steps=2)
+    assert out.status == "truncated"
+    assert {r.rid for r in out.pending} == {0, 1, 2} - {r.rid for r in out}
+    assert all(not r.done for r in out.pending)
+    out2 = eng.run()  # resumes: in-flight slot state survived
+    assert out2.status == "drained" and len(out2) == 3
+
+
 def test_eos_terminates():
     cfg = smoke_config(get_config("qwen1.5-0.5b"))
     api = zoo.get_api(cfg)
