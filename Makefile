@@ -3,7 +3,7 @@
 PY ?= python
 PYTHONPATH := src
 
-.PHONY: test regen-goldens check-goldens bench-regression sharded-eval-sim
+.PHONY: test regen-goldens check-goldens check-autotune bench-regression sharded-eval-sim
 
 # tier-1 suite
 test:
@@ -19,6 +19,16 @@ regen-goldens:
 
 check-goldens:
 	PYTHONPATH=$(PYTHONPATH) $(PY) scripts/regen_goldens.py --check
+
+# The committed autotune cache must COVER every fused layer shape of the
+# benchmarked configs (default 24x32 + the large-input 96x128) — lookups
+# for uncovered shapes silently fall back to the untuned default, which
+# is bit-identical but forfeits the tuned crossover. Fails on a stale
+# (version-bumped) cache too, since that loads as empty. Regenerate with:
+#   PYTHONPATH=src python -m repro.kernels.autotune --input-hw 96x128
+check-autotune:
+	JAX_PLATFORMS=cpu PYTHONPATH=$(PYTHONPATH) \
+		$(PY) -m repro.kernels.autotune --check --input-hw 96x128
 
 # Compare fresh BENCH_*.json against baselines (default: the checked-in
 # copies snapshotted by CI before the benchmark run); fails on >20%

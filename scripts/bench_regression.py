@@ -20,6 +20,11 @@ baseline's — the checked-in BENCH_eval comes from the demonstration-scale
 run, while CI regenerates ``--fast``; comparing those walls would be
 noise, so mismatched configs are reported and skipped, never failed.
 
+When ``$GITHUB_STEP_SUMMARY`` is set (every GitHub Actions step), the
+same deltas are also appended there as a markdown table — baseline vs
+fresh throughput per metric with the percent change — so the review UI
+shows the numbers without digging through logs.
+
     python scripts/bench_regression.py --baseline-dir .bench-baseline \
         [--fresh-dir .] [--threshold 0.2] [--files BENCH_e2e.json ...]
 """
@@ -89,6 +94,35 @@ def compare(name: str, fresh: dict, base: dict, threshold: float,
     return rows, skipped
 
 
+def write_step_summary(sections: list, threshold: float) -> None:
+    """Append a markdown delta table per compared file to the GitHub
+    Actions step summary (no-op outside Actions). ``sections`` is
+    [(file, rows, skipped, note)] as accumulated by main() — rows are
+    the compare() tuples, note is a skip reason when rows is empty."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = [f"### Benchmark deltas (fail below −{threshold:.0%})", ""]
+    for name, rows, skipped, note in sections:
+        lines += [f"#### `{name}`", ""]
+        if note:
+            lines += [f"_{note}_", ""]
+            continue
+        lines += ["| metric | baseline | fresh | change | |",
+                  "|---|---:|---:|---:|---|"]
+        for metric, bv, fv, ratio, bad in rows:
+            pct = (ratio - 1.0) * 100.0
+            flag = "❌ regressed" if bad else ("⬆️" if pct > 0 else "")
+            lines.append(f"| `{metric}` | {bv:.4g} | {fv:.4g} "
+                         f"| {pct:+.1f}% | {flag} |")
+        for metric in skipped:
+            lines.append(f"| `{metric}` | — | — | — | skipped (below "
+                         "timing floor) |")
+        lines.append("")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline-dir", required=True,
@@ -105,12 +139,14 @@ def main(argv=None) -> int:
 
     failed = []
     compared_any = False
+    sections = []  # (file, rows, skipped, skip-note) for the step summary
     for name in args.files:
         fresh_p = os.path.join(args.fresh_dir, name)
         base_p = os.path.join(args.baseline_dir, name)
         if not os.path.exists(fresh_p) or not os.path.exists(base_p):
-            print(f"{name}: skipped (missing "
-                  f"{'fresh' if not os.path.exists(fresh_p) else 'baseline'})")
+            which = "fresh" if not os.path.exists(fresh_p) else "baseline"
+            print(f"{name}: skipped (missing {which})")
+            sections.append((name, [], [], f"skipped: missing {which} file"))
             continue
         with open(fresh_p) as f:
             fresh = json.load(f)
@@ -119,12 +155,16 @@ def main(argv=None) -> int:
         if fresh.get("config") != base.get("config"):
             print(f"{name}: skipped (config mismatch — fresh "
                   f"{fresh.get('config')} vs baseline {base.get('config')})")
+            sections.append((name, [], [],
+                             "skipped: config mismatch vs baseline"))
             continue
         rows, skipped = compare(name, fresh, base, args.threshold,
                                 args.min_seconds)
         if not rows and not skipped:
             print(f"{name}: no comparable throughput metrics")
+            sections.append((name, [], [], "no comparable throughput metrics"))
             continue
+        sections.append((name, rows, skipped, None))
         print(f"\n{name} (threshold −{args.threshold:.0%}):")
         print(f"  {'metric':28s} {'baseline':>12s} {'fresh':>12s} "
               f"{'ratio':>7s}")
@@ -138,6 +178,7 @@ def main(argv=None) -> int:
             print(f"  {metric:28s} skipped (wall < {args.min_seconds}s: "
                   "below timing resolution)")
     print()
+    write_step_summary(sections, args.threshold)
     if failed:
         print(f"throughput regression > {args.threshold:.0%}: "
               + ", ".join(failed))

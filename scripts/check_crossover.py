@@ -1,0 +1,75 @@
+"""Large-input crossover gate: pallas must beat dense at scale.
+
+The macro-tiled fused pipeline exists to amortize per-grid-step overhead
+at LARGE inputs; ``BENCH_e2e_96x128.json`` records the crossover. This
+gate keeps it from silently regressing: it fails when the pallas
+executor's wall-clock exceeds dense's (beyond ``--tolerance`` headroom
+for shared-runner noise) in a freshly regenerated benchmark file, and
+also re-asserts the bit-exactness contract (``max_abs_diff_vs_dense``
+must be 0.0 for every executor — a fast-but-wrong kernel is worse than a
+slow one).
+
+Both walls come from the SAME interleaved median-of-200 run, so the
+comparison is relative and much less noisy than cross-machine absolute
+thresholds — but sub-``--min-seconds`` walls are still timer noise and
+skip the check rather than flake it.
+
+    python scripts/check_crossover.py [--file BENCH_e2e_96x128.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(data: dict, *, tolerance: float, min_seconds: float) -> tuple[bool, str]:
+    """(ok, message) for one BENCH_e2e-style payload."""
+    execs = data.get("executors", {})
+    for ex, r in execs.items():
+        diff = r.get("max_abs_diff_vs_dense")
+        if diff is None or diff != 0.0:
+            return False, f"{ex}: max_abs_diff_vs_dense={diff!r}, expected 0.0"
+    dense = execs.get("dense", {}).get("wall_s")
+    pallas = execs.get("pallas", {}).get("wall_s")
+    if not dense or not pallas:
+        return False, f"missing dense/pallas wall_s (dense={dense}, pallas={pallas})"
+    if dense < min_seconds and pallas < min_seconds:
+        return True, (f"skipped: walls below timing resolution "
+                      f"(dense={dense*1e3:.3f}ms, pallas={pallas*1e3:.3f}ms "
+                      f"< {min_seconds*1e3:.0f}ms)")
+    ratio = pallas / dense
+    msg = (f"dense={dense*1e3:.3f}ms pallas={pallas*1e3:.3f}ms "
+           f"(pallas/dense={ratio:.3f}x, tolerance {1 + tolerance:.2f}x)")
+    if ratio > 1 + tolerance:
+        return False, "pallas slower than dense: " + msg
+    return True, "crossover holds: " + msg
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--file", default="BENCH_e2e_96x128.json",
+                    help="freshly regenerated large-input benchmark JSON")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="fractional headroom before pallas > dense fails "
+                    "(same-run medians still jitter a few %% on shared "
+                    "runners)")
+    ap.add_argument("--min-seconds", type=float, default=0.001,
+                    help="skip the wall comparison when BOTH walls are "
+                    "below this (sub-ms medians are timer noise)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.file) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"crossover gate: cannot read {args.file}: {e}")
+        return 1
+    ok, msg = check(data, tolerance=args.tolerance,
+                    min_seconds=args.min_seconds)
+    print(f"crossover gate [{args.file}]: {msg}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

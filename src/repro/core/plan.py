@@ -435,6 +435,8 @@ def run_fused(
         bh=bh,
         bw=bw,
         nbt=lp.tile.nbt,
+        mrows=lp.tile.mrows,
+        mcols=lp.tile.mcols,
         interpret=interpret,
     )
 

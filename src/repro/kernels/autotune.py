@@ -3,11 +3,13 @@
 SpikeX-style (arXiv 2505.12292) insight: sparse-SNN speedups come from
 block/tiling-shape co-optimization, not arithmetic — the same fused kernel
 can be dispatched with different K-block widths (``kblk``, the packed
-weight-block granularity) and spatial-group sizes (``nbt``, how many
-independent 18×32 conv blocks one grid step stacks into a single MXU dot).
-Neither knob changes numerics (integer accumulation is order-independent,
-the affine/LIF chain is element-wise), so tiling is a pure wall-clock
-search problem.
+weight-block granularity), macro-tile shapes (``mrows × mcols``, how many
+spatial conv blocks one grid step owns — whole rows of blocks or r×c
+groups, collapsing the grid at large inputs), and MXU dot granularities
+(``nbt``, how many of the macro-tile's blocks each dot stacks; divides
+``mrows·mcols``). None of these knobs changes numerics (integer
+accumulation is order-independent, the affine/LIF chain is element-wise),
+so tiling is a pure wall-clock search problem.
 
 This module sweeps candidate :class:`TileConfig` s per LAYER SHAPE,
 measures the fused dispatch with the same median-of-k wall-clock harness
@@ -41,21 +43,34 @@ import numpy as np
 
 DEFAULT_CACHE_PATH = os.path.join(os.path.dirname(__file__), "autotune_cache.json")
 CACHE_ENV_VAR = "REPRO_AUTOTUNE_CACHE"
-CACHE_VERSION = 1
+CACHE_VERSION = 2  # v2: macro-tile axis (mrows/mcols) joined the search
 
 KBLK_CANDIDATES = (32, 64, 128)
 NBT_CANDIDATES = (1, 2, 4, 8, 16)
+# macro-tile edge lengths tried along each block-grid axis (must divide
+# the grid edge to be enumerated — ragged macros are legal but waste pad)
+MACRO_CANDIDATES = (1, 2, 4, 8, 16, 32)
+# dots-per-grid-step granularities tried inside a macro-tile
+DOT_GROUP_CANDIDATES = (1, 2, 4)
 # candidate tilings must keep (spikes + weights + scratch) under VMEM
 VMEM_BUDGET_BYTES = 12 * 2**20
+# walls within this fraction of the fastest candidate count as a tie —
+# break toward the LARGEST macro-tile (fewest grid steps): per-step
+# overhead amortization is the monotone effect the sweep exists to
+# exploit, and sub-noise argmin would otherwise pick shapes at random
+TIE_MARGIN = 0.05
 
 
 class TileConfig(NamedTuple):
     """One fused-kernel dispatch shape. ``kblk``: packed K-block width
-    (output channels decoded/computed per grid step); ``nbt``: spatial
-    conv blocks stacked per grid step."""
+    (output channels decoded/computed per grid step); ``mrows × mcols``:
+    macro-tile of spatial conv blocks each grid step owns; ``nbt``:
+    blocks stacked per MXU dot (divides ``mrows·mcols``)."""
 
     kblk: int = 128
     nbt: int = 1
+    mrows: int = 1
+    mcols: int = 1
 
 
 DEFAULT_TILE = TileConfig()
@@ -143,7 +158,12 @@ def load_cache(path: str | None = None) -> dict[str, TileConfig]:
     out = {}
     for key, cfgd in raw.get("entries", {}).items():
         try:
-            out[key] = TileConfig(kblk=int(cfgd["kblk"]), nbt=int(cfgd["nbt"]))
+            out[key] = TileConfig(
+                kblk=int(cfgd["kblk"]),
+                nbt=int(cfgd["nbt"]),
+                mrows=int(cfgd.get("mrows", 1)),
+                mcols=int(cfgd.get("mcols", 1)),
+            )
         except (KeyError, TypeError, ValueError):
             continue  # one bad entry falls back; the rest stay usable
     return out
@@ -157,7 +177,12 @@ def save_cache(entries: dict[str, TileConfig], path: str | None = None) -> str:
     payload = {
         "version": CACHE_VERSION,
         "entries": {
-            key: {"kblk": int(t.kblk), "nbt": int(t.nbt)}
+            key: {
+                "kblk": int(t.kblk),
+                "nbt": int(t.nbt),
+                "mrows": int(t.mrows),
+                "mcols": int(t.mcols),
+            }
             for key, t in sorted(entries.items())
         },
     }
@@ -202,27 +227,44 @@ def measure(fn: Callable[[], jax.Array], *, iters: int = 5, warmup: int = 1) -> 
     return float(np.median(walls))
 
 
+def _macro_shapes(nbh: int, nbw: int) -> list[tuple[int, int]]:
+    """Macro-tile shapes tried for an nbh×nbw block grid: grow along the
+    row first (contiguous blocks), then stack whole rows — i.e. (1, c)
+    for c | nbw, then (r, nbw) for r | nbh. This chain covers everything
+    from single-block to whole-grid without a quadratic sweep."""
+    mcs = [m for m in MACRO_CANDIDATES if m <= nbw and nbw % m == 0]
+    mrs = [m for m in MACRO_CANDIDATES if m <= nbh and nbh % m == 0]
+    shapes = [(1, mc) for mc in mcs]
+    shapes += [(mr, nbw) for mr in mrs if mr > 1 and nbw in mcs]
+    return shapes
+
+
 def candidates(shape: LayerShape) -> list[TileConfig]:
     """Legal tile configs for a layer shape: kblk clipped to the padded
     output width (one tight block minimum, matching build_layer_plan),
-    nbt a divisor-friendly spatial group ≤ the block count, both capped
-    by a crude VMEM footprint model."""
+    macro-tile shapes from :func:`_macro_shapes` (row-first chain up to
+    the whole block grid), nbt a divisor of the macro-tile size keeping
+    the per-step dot count small, all capped by a crude VMEM model."""
     kout8 = -(-shape.kout // 8) * 8
     kblks = sorted({min(kb, kout8) for kb in KBLK_CANDIDATES})
-    nbts = sorted({min(nbt, shape.n_blocks) for nbt in NBT_CANDIDATES})
+    nbh, nbw = shape.h // shape.bh, shape.w // shape.bw
     out = []
     cin_p = -(-shape.cin // 8) * 8
     ph, pw = shape.bh + shape.kh - 1, shape.bw + shape.kw - 1
     in_bytes = 4 if shape.in_bits == 8 else 1
     for kblk in kblks:
-        for nbt in nbts:
+        for mr, mc in _macro_shapes(nbh, nbw):
+            bpg = mr * mc
             vmem = (
-                shape.t_in * nbt * ph * pw * cin_p * in_bytes  # spike tile
+                shape.t_in * bpg * ph * pw * cin_p * in_bytes  # spike tile
                 + shape.kh * shape.kw * cin_p * kblk * 2  # maskp+decoded w
-                + nbt * shape.bh * shape.bw * kblk * (4 + 4 + shape.t_out)
+                + bpg * shape.bh * shape.bw * kblk * (4 + 4 + shape.t_out)
             )
-            if vmem <= VMEM_BUDGET_BYTES:
-                out.append(TileConfig(kblk=kblk, nbt=nbt))
+            if vmem > VMEM_BUDGET_BYTES:
+                continue
+            nbts = sorted({bpg // g for g in DOT_GROUP_CANDIDATES if bpg % g == 0})
+            for nbt in nbts:
+                out.append(TileConfig(kblk=kblk, nbt=nbt, mrows=mr, mcols=mc))
     return out or [DEFAULT_TILE]
 
 
@@ -258,7 +300,7 @@ def tune_layer(
     rng = np.random.default_rng(0)
     w, x_t = _synthetic_layer(shape, rng)
     record: dict[str, float] = {}
-    best, best_wall = DEFAULT_TILE, float("inf")
+    walls_by_tile: list[tuple[TileConfig, float]] = []
     for tile in candidates(shape):
         packed = ops.pack_conv_weights(w, kblk=tile.kblk)
         kp = packed.maskp.shape[0] * packed.kblk
@@ -271,9 +313,14 @@ def tune_layer(
             jnp.zeros((shape.kout,)),
         )
 
-        def run(tile=tile, packed=packed, affine=affine):
+        # measure the JITTED dispatch: production plans run fused layers
+        # inside one jitted detector graph, so the eager python/layout
+        # overhead of a bare call (~1ms, constant across tiles) would
+        # otherwise drown the real per-tile differences in a shared floor
+        @functools.partial(jax.jit, static_argnums=())
+        def _fused(x, packed=packed, affine=affine, tile=tile):
             spk, mem = ops.fused_conv_bn_lif(
-                x_t,
+                x,
                 packed,
                 affine,
                 v0=None,
@@ -285,17 +332,29 @@ def tune_layer(
                 bh=shape.bh,
                 bw=shape.bw,
                 nbt=tile.nbt,
+                mrows=tile.mrows,
+                mcols=tile.mcols,
             )
             return mem
+
+        def run():
+            return _fused(x_t)
 
         wall = (
             measure_fn(tile, run)
             if measure_fn is not None
             else measure(run, iters=iters)
         )
-        record[f"kblk{tile.kblk}_nbt{tile.nbt}"] = wall
-        if wall < best_wall:
-            best, best_wall = tile, wall
+        record[f"kblk{tile.kblk}_nbt{tile.nbt}_mt{tile.mrows}x{tile.mcols}"] = wall
+        walls_by_tile.append((tile, wall))
+    if not walls_by_tile:
+        return DEFAULT_TILE, record
+    best_wall = min(w for _, w in walls_by_tile)
+    # noise-aware winner: among walls within TIE_MARGIN of the fastest,
+    # take the largest macro-tile (then coarsest dots, then widest kblk)
+    near = [(t, w) for t, w in walls_by_tile if w <= best_wall * (1 + TIE_MARGIN)]
+    best = max(near, key=lambda tw: (tw[0].mrows * tw[0].mcols, tw[0].nbt,
+                                     tw[0].kblk))[0]
     return best, record
 
 
@@ -348,8 +407,26 @@ def tune_detector(
         entries[shape.key] = tile
         if verbose:
             walls = ", ".join(f"{k}={v*1e3:.2f}ms" for k, v in sorted(record.items()))
-            print(f"  {name:20s} {shape.key}\n    -> kblk={tile.kblk} nbt={tile.nbt}   ({walls})")
+            print(
+                f"  {name:20s} {shape.key}\n    -> kblk={tile.kblk} "
+                f"nbt={tile.nbt} macro={tile.mrows}x{tile.mcols}   ({walls})"
+            )
     return entries
+
+
+def check_cache(cfgs, path: str | None = None) -> list[str]:
+    """Return the cache keys required by ``cfgs`` that the committed cache
+    is MISSING (empty list = fully covered). A stale or corrupt cache
+    loads as {} and therefore reports every key missing — exactly the
+    state `make check-autotune` exists to catch, since lookup() would
+    silently fall back to DEFAULT_TILE for all of them."""
+    cache = load_cache(path)
+    missing = []
+    for cfg in cfgs:
+        for name, shape in sorted(detector_layer_shapes(cfg).items()):
+            if shape.key not in cache and shape.key not in missing:
+                missing.append(shape.key)
+    return missing
 
 
 def main(argv=None) -> int:
@@ -358,6 +435,11 @@ def main(argv=None) -> int:
                     help="HxW override for the tuned config (e.g. 96x128)")
     ap.add_argument("--out", default=None, help="cache path (default: packaged)")
     ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument(
+        "--check", action="store_true",
+        help="don't tune: fail (exit 1) if the committed cache is missing "
+        "entries for the benchmarked configs (default + --input-hw)",
+    )
     args = ap.parse_args(argv)
 
     import dataclasses
@@ -368,6 +450,19 @@ def main(argv=None) -> int:
     if args.input_hw:
         h, w = (int(v) for v in args.input_hw.lower().split("x"))
         cfgs.append(dataclasses.replace(cfgs[0], input_hw=(h, w)))
+
+    if args.check:
+        missing = check_cache(cfgs, args.out)
+        if missing:
+            print(f"autotune cache {cache_path(args.out)} is missing "
+                  f"{len(missing)} entr{'y' if len(missing) == 1 else 'ies'}:")
+            for key in missing:
+                print(f"  {key}")
+            print("regenerate with: python -m repro.kernels.autotune"
+                  + (f" --input-hw {args.input_hw}" if args.input_hw else ""))
+            return 1
+        print(f"autotune cache covers all {len(cfgs)} benchmarked config(s)")
+        return 0
 
     entries = load_cache(args.out)
     for cfg in cfgs:

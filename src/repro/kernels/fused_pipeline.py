@@ -40,12 +40,21 @@ channel loop. `benchmarks/kernel_bench.py` asserts the single-dispatch
 property by counting pallas_call equations in the trace and checks parity
 against the literal 8-plane bit-serial reference.
 
-Grid/tiling: grid = (K-blocks, spatial-block groups) — K outer, spatial
+Grid/tiling: grid = (K-blocks, spatial macro-tiles) — K outer, spatial
 inner, the paper's KTBC order, so compressed weights are decoded once per
-K-block and reused across every spatial tile and time step. `nbt` spatial
-blocks are processed per grid step (stacked into one MXU dot); `nbt` and
-the K-block width are the per-layer-shape autotuning knobs swept by
-`kernels/autotune.py`.
+K-block and reused across every spatial tile and time step. Each grid step
+processes a MACRO-TILE of ``bpg = mrows·mcols`` spatial blocks (a whole
+row of blocks, or an r×c block group — the host layout in ops.py makes
+the group contiguous along the block axis): the gated product runs as
+``bpg//nbt`` MXU dots of ``nbt`` stacked blocks each, and the FXP rescale,
+tdBN affine and LIF update are vectorized across the WHOLE macro-tile.
+Large inputs are won here: at 96×128 a per-block grid is 256 steps whose
+per-step overhead (block fetch, interpret-loop iteration) dwarfs the
+arithmetic — macro-tiles collapse it to a handful of steps per K-block.
+Blocks stay independent (each carries its own replicate-padded halo), so
+any macro shape is bit-exact with the one-block-per-step dispatch.
+``(kblk, nbt, mrows×mcols)`` are the per-layer-shape autotuning knobs
+swept by `kernels/autotune.py`.
 """
 from __future__ import annotations
 
@@ -84,7 +93,7 @@ def _rounded(x: jax.Array) -> jax.Array:
 
 
 def _kernel(
-    spikes_ref,  # VMEM (t_in, nbt, BH+2p, BW+2p, C) int8 (f32 for in_bits=8)
+    spikes_ref,  # VMEM (t_in, bpg, BH+2p, BW+2p, C) int8 (f32 for in_bits=8)
     *refs,  # packed mode: maskp, vals, affine, v0, spk, mem, wdense scratch
     #         predecoded mode: wdense, affine, v0, spk, mem (no scratch)
     taps: int,
@@ -92,7 +101,8 @@ def _kernel(
     kw: int,
     bh: int,
     bw: int,
-    nbt: int,
+    bpg: int,  # spatial blocks per grid step (the macro-tile, mrows·mcols)
+    nbt: int,  # blocks stacked per MXU dot; divides bpg
     t_in: int,
     t_out: int,
     in_bits: int,
@@ -133,29 +143,34 @@ def _kernel(
             wdense_ref[...] = dense.reshape(taps, c8 * 8, kblk).astype(jnp.int8)
 
     kblk = wdense_ref.shape[-1]
-    m = nbt * bh * bw
+    m = bpg * bh * bw
     acc_dtype = jnp.float32 if in_bits == 8 else jnp.int32
 
-    # ---- conv: ONE (t_in·m, live·C)×(live·C, KBLK) MXU dot covering every
-    # live tap and every input time step. The per-block im2col stacks the
-    # live taps' shifted windows along a patch axis; dead taps (every weight
-    # pruned — common for the 80%-pruned 3×3 kernels) are dropped from BOTH
-    # the patch matrix and the weight rows at TRACE time via ``tap_alive``
+    # ---- conv over the macro-tile: bpg//nbt MXU dots, each one
+    # (t_in·nbt·bh·bw, live·C)×(live·C, KBLK), covering every live tap and
+    # every input time step. The per-block im2col stacks the live taps'
+    # shifted windows along a patch axis; dead taps (every weight pruned —
+    # common for the 80%-pruned 3×3 kernels) are dropped from BOTH the
+    # patch matrix and the weight rows at TRACE time via ``tap_alive``
     # (liveness is a pack-time property, so no runtime cond). Integer
     # accumulation is order-independent, so folding the tap loop into the
-    # dot's reduction axis is bit-exact with any per-tap summation. ----
-    spk_all = spikes_ref[...]  # one ref read; taps slice the value
+    # dot's reduction axis — and splitting the macro-tile into dot groups —
+    # is bit-exact with any per-tap, per-block summation. ----
+    spk_all = spikes_ref[...]  # one ref read; taps/groups slice the value
     # predecoded input carries a leading (1,) K-block axis; scratch doesn't
     wall = wdense_ref[0] if predecode else wdense_ref[...]
     cin = spk_all.shape[-1]
+    ph_, pw_ = spk_all.shape[2], spk_all.shape[3]
     if not tap_alive:
-        acc = jnp.zeros((t_in * m, kblk), acc_dtype)
+        acc = jnp.zeros((t_in, m, kblk), acc_dtype)
     elif conv_body:
         # interpret mode runs the kernel body as XLA ops on CPU, where one
-        # native VALID conv beats the hand im2col (9 slices + stack + dot)
-        # by a wide margin. Zero (pruned) taps contribute exact zeros, and
-        # integer-valued f32 accumulation is order-independent, so this is
-        # bit-identical to the tap-sliced MXU dot used on hardware.
+        # native VALID conv over the WHOLE macro-tile beats the hand im2col
+        # (9 slices + stack + dot) by a wide margin — and is where the
+        # macro-tile pays off: one conv op per grid step regardless of bpg.
+        # Zero (pruned) taps contribute exact zeros, and integer-valued f32
+        # accumulation is order-independent, so this is bit-identical to
+        # the tap-sliced MXU dots used on hardware.
         if kh == 1 and kw == 1:
             # pointwise: no halo (ph == bh), the conv IS one channel dot —
             # skip the conv op's window machinery entirely
@@ -164,47 +179,49 @@ def _kernel(
                 wall.reshape(cin, kblk).astype(jnp.float32),
                 (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32,
-            )
+            ).reshape(t_in, m, kblk)
         else:
-            x = spk_all.reshape(t_in * nbt, spk_all.shape[2], spk_all.shape[3], cin)
+            x = spk_all.reshape(t_in * bpg, ph_, pw_, cin)
             acc = jax.lax.conv_general_dilated(
                 x.astype(jnp.float32),
                 wall.reshape(kh, kw, cin, kblk).astype(jnp.float32),
                 window_strides=(1, 1),
                 padding="VALID",
                 dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            ).reshape(t_in * m, kblk)
+            ).reshape(t_in, m, kblk)
     else:
-        wins = [
-            jax.lax.slice(
-                spk_all,
-                (0, 0, tap // kw, tap % kw, 0),
-                (t_in, nbt, tap // kw + bh, tap % kw + bw, cin),
-            )
-            for tap in tap_alive
-        ]
-        # (t_in, nbt, bh, bw, live, C) → rows ordered exactly like the
-        # membrane/output layout, cols ordered [tap, c] like wdense rows
-        patches = jnp.stack(wins, axis=-2)
-        s = patches.reshape(t_in * m, len(tap_alive) * cin)
         w = wall if len(tap_alive) == taps else jnp.stack([wall[t] for t in tap_alive])
         w = w.reshape(len(tap_alive) * cin, kblk)
         if in_bits == 8:
             # multibit u8 input: f32 MXU dot — exact while live·C·255·127
             # < 2^24 (the u8 encode layer has C≤8, far inside the bound)
-            acc = jax.lax.dot_general(
-                s,
-                w.astype(jnp.float32),
-                (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
+            w = w.astype(jnp.float32)
+        groups = []
+        for g0 in range(0, bpg, nbt):  # static unroll: bpg//nbt dot groups
+            blk = jax.lax.slice(
+                spk_all, (0, g0, 0, 0, 0), (t_in, g0 + nbt, ph_, pw_, cin)
             )
-        else:
-            acc = jax.lax.dot_general(
-                s,
-                w,
-                (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32,
+            wins = [
+                jax.lax.slice(
+                    blk,
+                    (0, 0, tap // kw, tap % kw, 0),
+                    (t_in, nbt, tap // kw + bh, tap % kw + bw, cin),
+                )
+                for tap in tap_alive
+            ]
+            # (t_in, nbt, bh, bw, live, C) → rows ordered exactly like the
+            # membrane/output layout, cols ordered [tap, c] like wdense rows
+            patches = jnp.stack(wins, axis=-2)
+            s = patches.reshape(t_in, nbt * bh * bw, len(tap_alive) * cin)
+            groups.append(
+                jax.lax.dot_general(
+                    s,
+                    w,
+                    (((2,), (0,)), ((), ())),
+                    preferred_element_type=acc_dtype,
+                )
             )
+        acc = groups[0] if len(groups) == 1 else jnp.concatenate(groups, axis=1)
 
     scale = affine_ref[0, 0]  # (KBLK,) — FXP scale (scalar, row-broadcast)
     mean = affine_ref[0, 1]
@@ -218,9 +235,11 @@ def _kernel(
     # _rounded pins every product that feeds an add/sub — see its docstring:
     # without it XLA contracts mul+add into FMAs, a silent 1-ulp drift that
     # can flip spikes sitting exactly at threshold.
+    # vectorized across the whole macro-tile: one element-wise chain over
+    # (t_in, bpg·bh·bw, KBLK), however many dot groups produced the drive
     y_all = _rounded(acc.astype(jnp.float32) * scale)
     x_hat = _rounded((y_all - mean) * rinv)
-    drives = (_rounded((bn_scale * x_hat) * gamma) + beta).reshape(t_in, m, kblk)
+    drives = _rounded((bn_scale * x_hat) * gamma) + beta
 
     v = v0_ref[...].reshape(m, kblk)
     for t in range(t_out):  # T ≤ 4: unrolled, v stays in VREGs/VMEM
@@ -228,7 +247,7 @@ def _kernel(
         y = drives[0] if t_in == 1 else drives[t]
         v = _rounded(v * leak) + y
         spiked = v >= threshold
-        spk_ref[t] = spiked.reshape(nbt, bh, bw, kblk).astype(jnp.int8)
+        spk_ref[t] = spiked.reshape(bpg, bh, bw, kblk).astype(jnp.int8)
         if reset == "soft":
             # reset by subtraction: where(s, v−θ, v) ≡ v − s·θ for
             # s ∈ {0,1} (s·θ is exactly 0 or θ, so one subtraction either
@@ -239,7 +258,7 @@ def _kernel(
             # arithmetic → no rounding, so no _rounded barrier needed;
             # ±0.0 both propagate as exact zero through v·leak + y)
             v = jnp.where(spiked, 0.0, v)
-    mem_ref[...] = v.reshape(nbt, bh, bw, kblk)
+    mem_ref[...] = v.reshape(bpg, bh, bw, kblk)
 
 
 def fused_pipeline_pallas(
@@ -262,6 +281,7 @@ def fused_pipeline_pallas(
     threshold: float,
     leak: float,
     reset: str = "hard",
+    bpg: int | None = None,  # macro-tile: blocks per grid step (default nbt)
     wdense: jax.Array | None = None,  # (KB, taps, C, KBLK) int8 (predecoded)
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
@@ -274,13 +294,19 @@ def fused_pipeline_pallas(
     static inference weights it then runs once per COMPILE, not per frame).
     Both modes compute bit-identically.
 
-    ``nbt`` spatial blocks are processed per grid step (must divide NB —
-    callers pad). Grid order is K-blocks outer / spatial groups inner so the
-    decoded weight block is reused across every spatial tile and time step.
+    ``bpg`` spatial blocks — the macro-tile, e.g. mrows·mcols contiguous
+    blocks of the block grid (callers order/pad the block axis so each
+    macro group is contiguous and bpg divides NB) — are processed per grid
+    step; within a step the conv runs as ``bpg//nbt`` MXU dots of ``nbt``
+    stacked blocks each. Grid order is K-blocks outer / macro-tiles inner
+    so the decoded weight block is reused across every spatial tile and
+    time step.
     """
     interpret = auto_interpret(interpret)
     predecode = wdense is not None
     t_in, nb_total, ph, pw, cin = spike_blocks.shape
+    if bpg is None:
+        bpg = nbt
     if predecode:
         kb_total, taps, cin_, kblk_ = wdense.shape
         assert cin_ == cin, (cin_, cin)
@@ -289,7 +315,8 @@ def fused_pipeline_pallas(
         assert c8 * 8 == cin
     assert kblk_ == kblk and taps == kh * kw
     assert ph == bh + kh - 1 and pw == bw + kw - 1
-    assert nb_total % nbt == 0, (nb_total, nbt)
+    assert bpg % nbt == 0, (bpg, nbt)
+    assert nb_total % bpg == 0, (nb_total, bpg)
     assert t_in == t_out or t_in == 1, (t_in, t_out)
     assert affine.shape == (kb_total, AFFINE_ROWS, kblk)
 
@@ -305,7 +332,7 @@ def fused_pipeline_pallas(
         w_inputs = (maskp, vals)
         scratch = [pltpu.VMEM((taps, cin, kblk), jnp.int8)]
 
-    grid = (kb_total, nb_total // nbt)  # K outer, spatial inner → KTBC order
+    grid = (kb_total, nb_total // bpg)  # K outer, macro inner → KTBC order
     spk, mem = pl.pallas_call(
         functools.partial(
             _kernel,
@@ -314,6 +341,7 @@ def fused_pipeline_pallas(
             kw=kw,
             bh=bh,
             bw=bw,
+            bpg=bpg,
             nbt=nbt,
             t_in=t_in,
             t_out=t_out,
@@ -328,14 +356,14 @@ def fused_pipeline_pallas(
         ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((t_in, nbt, ph, pw, cin), lambda kb, nb: (0, nb, 0, 0, 0)),
+            pl.BlockSpec((t_in, bpg, ph, pw, cin), lambda kb, nb: (0, nb, 0, 0, 0)),
             *w_specs,
             pl.BlockSpec((1, AFFINE_ROWS, kblk), lambda kb, nb: (kb, 0, 0)),
-            pl.BlockSpec((nbt, bh, bw, kblk), lambda kb, nb: (nb, 0, 0, kb)),
+            pl.BlockSpec((bpg, bh, bw, kblk), lambda kb, nb: (nb, 0, 0, kb)),
         ],
         out_specs=[
-            pl.BlockSpec((t_out, nbt, bh, bw, kblk), lambda kb, nb: (0, nb, 0, 0, kb)),
-            pl.BlockSpec((nbt, bh, bw, kblk), lambda kb, nb: (nb, 0, 0, kb)),
+            pl.BlockSpec((t_out, bpg, bh, bw, kblk), lambda kb, nb: (0, nb, 0, 0, kb)),
+            pl.BlockSpec((bpg, bh, bw, kblk), lambda kb, nb: (nb, 0, 0, kb)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((t_out, nb_total, bh, bw, kb_total * kblk), jnp.int8),

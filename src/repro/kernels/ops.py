@@ -142,16 +142,42 @@ def validate_packed(pw: PackedConvWeights) -> None:
         )
 
 
-def _block_layout(spikes: jax.Array, *, bh: int, bw: int, pad: int, cin_p: int) -> jax.Array:
-    """NHWC int8 spikes → (N*nbh*nbw, bh+2p, bw+2p, Cp) replicate-padded
-    independent blocks (block convolution, paper §II-B)."""
+def _macro_grid(nbh: int, nbw: int, mr: int, mc: int) -> tuple[int, int]:
+    """Macro-tile grid (GH, GW): how many mr×mc block groups cover an
+    nbh×nbw block grid (ragged edges round UP — the layout zero-pads)."""
+    return -(-nbh // mr), -(-nbw // mc)
+
+
+def _block_layout(
+    spikes: jax.Array, *, bh: int, bw: int, pad: int, cin_p: int,
+    mr: int = 1, mc: int = 1,
+) -> jax.Array:
+    """NHWC int8 spikes → (N*GH*GW*mr*mc, bh+2p, bw+2p, Cp) replicate-padded
+    independent blocks (block convolution, paper §II-B), ordered so every
+    mr×mc MACRO-TILE of the block grid is contiguous along the block axis —
+    the fused kernel's grid step then covers one macro group with a single
+    dynamic slice. Ragged block grids (nbh % mr or nbw % mc nonzero) are
+    zero-padded with whole garbage blocks that ``_unblock`` strips; each
+    block still carries its OWN replicate-padded halo, so the macro
+    ordering never changes numerics."""
     n, h, w, c = spikes.shape
     if h % bh or w % bw:
         raise ValueError(f"({h},{w}) not divisible by block ({bh},{bw})")
     x = spikes
     if c < cin_p:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cin_p - c)))
-    x = x.reshape(n, h // bh, bh, w // bw, bw, cin_p).transpose(0, 1, 3, 2, 4, 5)
+    nbh, nbw = h // bh, w // bw
+    x = x.reshape(n, nbh, bh, nbw, bw, cin_p).transpose(0, 1, 3, 2, 4, 5)
+    if mr > 1 or mc > 1:
+        gh, gw = _macro_grid(nbh, nbw, mr, mc)
+        if (gh * mr, gw * mc) != (nbh, nbw):
+            x = jnp.pad(
+                x,
+                ((0, 0), (0, gh * mr - nbh), (0, gw * mc - nbw))
+                + ((0, 0),) * 3,
+            )
+        x = x.reshape(n, gh, mr, gw, mc, bh, bw, cin_p)
+        x = x.transpose(0, 1, 3, 2, 4, 5, 6, 7)  # groups outer, tile inner
     x = x.reshape(-1, bh, bw, cin_p)
     if pad:
         x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)), mode="edge")
@@ -232,26 +258,33 @@ def gated_conv(
 # ---------------------------------------------------------------------------
 
 
-def _block_layout_nohalo(x: jax.Array, *, bh: int, bw: int, cpad: int) -> jax.Array:
-    """NHWC f32 → (N*nbh*nbw, bh, bw, Cp) independent blocks, channel-padded
-    (the membrane layout — no conv halo)."""
-    n, h, w, c = x.shape
-    if c < cpad:
-        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cpad - c)))
-    x = x.reshape(n, h // bh, bh, w // bw, bw, cpad).transpose(0, 1, 3, 2, 4, 5)
-    return x.reshape(-1, bh, bw, cpad)
+def _block_layout_nohalo(
+    x: jax.Array, *, bh: int, bw: int, cpad: int, mr: int = 1, mc: int = 1
+) -> jax.Array:
+    """NHWC f32 → (N*GH*GW*mr*mc, bh, bw, Cp) independent blocks, channel-
+    padded, macro-ordered like :func:`_block_layout` (the membrane layout —
+    no conv halo)."""
+    return _block_layout(x, bh=bh, bw=bw, pad=0, cin_p=cpad, mr=mr, mc=mc)
 
 
-def _unblock(xb: jax.Array, *, n: int, h: int, w: int) -> jax.Array:
-    """(N*nbh*nbw, bh, bw, C) blocks → NHWC (leading axes preserved)."""
+def _unblock(
+    xb: jax.Array, *, n: int, h: int, w: int, mr: int = 1, mc: int = 1
+) -> jax.Array:
+    """(N*GH*GW*mr*mc, bh, bw, C) macro-ordered blocks → NHWC (leading axes
+    preserved). Inverts :func:`_block_layout`: undoes the macro grouping,
+    then strips the zero-padded ragged-edge blocks by slicing to (h, w)."""
     bh, bw = xb.shape[-3], xb.shape[-2]
     lead = xb.shape[:-4]
-    xb = xb.reshape(lead + (n, h // bh, w // bw, bh, bw, xb.shape[-1]))
-    perm = tuple(range(len(lead))) + tuple(
-        len(lead) + i for i in (0, 1, 3, 2, 4, 5)
-    )
+    L = len(lead)
+    nbh, nbw = h // bh, w // bw
+    gh, gw = _macro_grid(nbh, nbw, mr, mc)
+    cc = xb.shape[-1]
+    xb = xb.reshape(lead + (n, gh, gw, mr, mc, bh, bw, cc))
+    # (..., n, gh, gw, mr, mc, bh, bw, C) → (..., n, gh, mr, bh, gw, mc, bw, C)
+    perm = tuple(range(L)) + tuple(L + i for i in (0, 1, 3, 5, 2, 4, 6, 7))
     xb = xb.transpose(perm)
-    return xb.reshape(lead + (n, h, w, xb.shape[-1]))
+    xb = xb.reshape(lead + (n, gh * mr * bh, gw * mc * bw, cc))
+    return xb[..., :h, :w, :]
 
 
 def affine_bundle(
@@ -302,6 +335,8 @@ def affine_bundle(
         "bh",
         "bw",
         "nbt",
+        "mr",
+        "mc",
         "t_out",
         "in_bits",
         "tap_alive",
@@ -330,6 +365,8 @@ def _dispatch_fused(
     bh,
     bw,
     nbt,
+    mr,
+    mc,
     t_out,
     in_bits,
     tap_alive,
@@ -355,6 +392,7 @@ def _dispatch_fused(
         bw=bw,
         kblk=kblk,
         nbt=nbt,
+        bpg=mr * mc,
         t_out=t_out,
         in_bits=in_bits,
         tap_alive=tap_alive,
@@ -365,10 +403,29 @@ def _dispatch_fused(
         wdense=wdense,
         interpret=interpret,
     )
-    nb = batch * (out_h // bh) * (out_w // bw)
-    spk = _unblock(spk[:, :nb].astype(jnp.float32), n=batch, h=out_h, w=out_w)
-    mem = _unblock(mem[:nb], n=batch, h=out_h, w=out_w)
+    spk = _unblock(spk.astype(jnp.float32), n=batch, h=out_h, w=out_w,
+                   mr=mr, mc=mc)
+    mem = _unblock(mem, n=batch, h=out_h, w=out_w, mr=mr, mc=mc)
     return spk[..., :kout], mem[..., :kout]
+
+
+def _normalize_tiling(
+    nbt: int, mrows: int, mcols: int, nbh: int, nbw: int
+) -> tuple[int, int, int]:
+    """Clamp a requested (nbt, mrows×mcols) tiling to a layer's nbh×nbw
+    block grid. A bare ``nbt`` with no macro shape (the legacy flat-group
+    form, still used by direct callers) maps to a 1×nbt row macro-tile;
+    macro axes clamp to the grid, and nbt drops to the largest divisor of
+    the macro size. Pure dispatch shaping — never affects numerics."""
+    if mrows * mcols == 1 and nbt > 1:
+        mrows, mcols = 1, nbt
+    mrows = max(1, min(mrows, nbh))
+    mcols = max(1, min(mcols, nbw))
+    bpg = mrows * mcols
+    nbt = max(1, min(nbt, bpg))
+    while bpg % nbt:
+        nbt -= 1
+    return nbt, mrows, mcols
 
 
 def fused_conv_bn_lif(
@@ -387,6 +444,8 @@ def fused_conv_bn_lif(
     bh: int = g2a.BLOCK_H,
     bw: int = g2a.BLOCK_W,
     nbt: int = 1,
+    mrows: int = 1,
+    mcols: int = 1,
     predecode: bool = True,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
@@ -397,6 +456,14 @@ def fused_conv_bn_lif(
     ``in_bits=8`` runs the encoding layer: ``x_t`` then carries the u8-grid
     pixel VALUES (as f32) — the exact fold of the 8 bit-serial planes, so
     encode is one dispatch of the same kernel (see fused_pipeline.py).
+
+    ``mrows``/``mcols`` select the MACRO-TILE: each grid step processes an
+    mrows×mcols group of spatial blocks (whole block-rows, or r×c groups),
+    with ``nbt`` blocks stacked per MXU dot inside the group — the grid
+    shrinks by mrows·mcols, amortizing per-step overhead at large inputs.
+    Ragged block grids zero-pad whole blocks that are stripped on the way
+    out. Passing only ``nbt`` (no macro shape) keeps the legacy flat
+    grouping as a 1×nbt macro-tile. Tiling NEVER changes numerics.
 
     ``predecode=True`` (default) runs the bitmask decoder stage host-side at
     trace time — inference weights are static, so the decode is paid once
@@ -417,6 +484,7 @@ def fused_conv_bn_lif(
             wd.reshape(pw.kh * pw.kw, pw.cin, kb_total, pw.kblk).transpose(2, 0, 1, 3)
         )
     t_in, n, h, w, _ = x_t.shape
+    nbt, mrows, mcols = _normalize_tiling(nbt, mrows, mcols, h // bh, w // bw)
     pad = (pw.kh - 1) // 2
     in_dtype = jnp.float32 if in_bits == 8 else jnp.int8
     flat = _block_layout(
@@ -425,6 +493,8 @@ def fused_conv_bn_lif(
         bw=bw,
         pad=pad,
         cin_p=pw.cin,
+        mr=mrows,
+        mc=mcols,
     )
     nb = flat.shape[0] // t_in
     blocks = flat.reshape((t_in, nb) + flat.shape[1:])
@@ -434,12 +504,9 @@ def fused_conv_bn_lif(
         # channels/blocks get it too but are sliced away on the way out
         v0b = jnp.full((nb, bh, bw, kp), v_init, jnp.float32)
     else:
-        v0b = _block_layout_nohalo(v0.astype(jnp.float32), bh=bh, bw=bw, cpad=kp)
-    nbt_eff = max(1, min(nbt, nb))
-    if nb % nbt_eff:  # pad the block axis up to an nbt multiple
-        nb_p = (nb + nbt_eff - 1) // nbt_eff * nbt_eff
-        blocks = jnp.pad(blocks, ((0, 0), (0, nb_p - nb)) + ((0, 0),) * 3)
-        v0b = jnp.pad(v0b, ((0, nb_p - nb),) + ((0, 0),) * 3)
+        v0b = _block_layout_nohalo(
+            v0.astype(jnp.float32), bh=bh, bw=bw, cpad=kp, mr=mrows, mc=mcols
+        )
     return _dispatch_fused(
         blocks,
         None if predecode else pw.maskp,
@@ -452,7 +519,9 @@ def fused_conv_bn_lif(
         kblk=pw.kblk,
         bh=bh,
         bw=bw,
-        nbt=nbt_eff,
+        nbt=nbt,
+        mr=mrows,
+        mc=mcols,
         t_out=out_t,
         in_bits=in_bits,
         tap_alive=tuple(pw.tap_alive),

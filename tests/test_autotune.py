@@ -181,3 +181,52 @@ class TestTileNumericsInvariance:
         got = self._head(setup, tile_cache=forced)
         want = self._head(setup, tile_cache={})
         np.testing.assert_array_equal(got, want)
+
+    def test_macro_tile_choice_never_changes_numerics(self, setup):
+        """The new macro-tile axis specifically: whole-row macros and the
+        largest whole-grid macro must both be bit-equal to single-block
+        dispatch, for every layer of the detector at once."""
+        cfg, params, bn, frames = setup
+        shapes = at.detector_layer_shapes(cfg)
+        want = self._head(setup, tile_cache={})
+
+        def pick_row(cands):  # widest 1×c row macro-tile
+            return max(cands, key=lambda t: (t.mrows == 1, t.mcols, t.nbt))
+
+        def pick_grid(cands):  # largest r×c macro-tile overall
+            return max(cands, key=lambda t: (t.mrows * t.mcols, t.nbt))
+
+        for pick in (pick_row, pick_grid):
+            forced = {s.key: pick(at.candidates(s)) for s in shapes.values()}
+            got = self._head(setup, tile_cache=forced)
+            np.testing.assert_array_equal(got, want)
+
+
+class TestCheckCache:
+    """`make check-autotune` contract: the committed cache must cover every
+    fused layer shape of the benchmarked configs — a silently-falling-back
+    lookup is exactly what --check exists to catch."""
+
+    def test_reports_all_missing_then_covered(self, tmp_path):
+        from repro.configs import get_config, smoke_config
+
+        cfg = dataclasses.replace(
+            smoke_config(get_config("snn-det")), arch_id="snn-det-checktest",
+            use_block_conv=True, conv_exec="pallas",
+        )
+        keys = {s.key for s in at.detector_layer_shapes(cfg).values()}
+        p = str(tmp_path / "cache.json")
+        assert sorted(at.check_cache([cfg], p)) == sorted(keys)  # no file
+        at.save_cache({k: at.DEFAULT_TILE for k in keys}, p)
+        assert at.check_cache([cfg], p) == []
+        stale = dict(json.loads(open(p).read()))
+        stale["version"] = at.CACHE_VERSION - 1  # stale cache == empty cache
+        open(p, "w").write(json.dumps(stale))
+        saved = set(at._warned_paths)
+        at._warned_paths.clear()
+        try:
+            with pytest.warns(RuntimeWarning):
+                assert sorted(at.check_cache([cfg], p)) == sorted(keys)
+        finally:
+            at._warned_paths.clear()
+            at._warned_paths.update(saved)

@@ -1,0 +1,107 @@
+"""The CI gate scripts (scripts/check_crossover.py, the step-summary
+writer in scripts/bench_regression.py) as units: the crossover gate is
+what keeps the macro-tiled pallas win at large inputs from silently
+regressing, so its skip/tolerance/parity edges need pinning."""
+from __future__ import annotations
+
+import importlib.util
+import os
+import sys
+
+import pytest
+
+_SCRIPTS = os.path.join(os.path.dirname(__file__), os.pardir, "scripts")
+
+
+def _load(name):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(_SCRIPTS, f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def crossover():
+    return _load("check_crossover")
+
+
+@pytest.fixture(scope="module")
+def bench_regression():
+    return _load("bench_regression")
+
+
+def _payload(dense_s, pallas_s, *, diff=0.0):
+    return {"executors": {
+        "dense": {"wall_s": dense_s, "max_abs_diff_vs_dense": 0.0},
+        "gated": {"wall_s": dense_s, "max_abs_diff_vs_dense": diff},
+        "pallas": {"wall_s": pallas_s, "max_abs_diff_vs_dense": diff},
+    }}
+
+
+class TestCrossoverGate:
+    def test_pallas_faster_passes(self, crossover):
+        ok, msg = crossover.check(_payload(0.008, 0.0078),
+                                  tolerance=0.05, min_seconds=0.001)
+        assert ok and "crossover holds" in msg
+
+    def test_pallas_within_tolerance_passes(self, crossover):
+        ok, _ = crossover.check(_payload(0.008, 0.0082),
+                                tolerance=0.05, min_seconds=0.001)
+        assert ok  # 1.025x < 1.05x headroom
+
+    def test_pallas_slower_fails(self, crossover):
+        ok, msg = crossover.check(_payload(0.0079, 0.0108),  # the pre-
+                                  tolerance=0.05, min_seconds=0.001)
+        assert not ok and "slower than dense" in msg  # macro-tile state
+
+    def test_sub_floor_walls_skip(self, crossover):
+        ok, msg = crossover.check(_payload(0.0004, 0.0009),
+                                  tolerance=0.05, min_seconds=0.001)
+        assert ok and "skipped" in msg
+
+    def test_nonzero_diff_fails_even_when_faster(self, crossover):
+        """A fast-but-wrong kernel must fail: bit-exactness is part of
+        the crossover contract, not a separate gate."""
+        ok, msg = crossover.check(_payload(0.008, 0.004, diff=1e-6),
+                                  tolerance=0.05, min_seconds=0.001)
+        assert not ok and "max_abs_diff_vs_dense" in msg
+
+    def test_missing_executor_fails(self, crossover):
+        ok, _ = crossover.check({"executors": {
+            "dense": {"wall_s": 0.008, "max_abs_diff_vs_dense": 0.0}}},
+            tolerance=0.05, min_seconds=0.001)
+        assert not ok
+
+    def test_cli_exit_codes(self, crossover, tmp_path, capsys):
+        import json
+        good = tmp_path / "good.json"
+        good.write_text(json.dumps(_payload(0.008, 0.0078)))
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps(_payload(0.0079, 0.0108)))
+        assert crossover.main(["--file", str(good)]) == 0
+        assert crossover.main(["--file", str(bad)]) == 1
+        assert crossover.main(["--file", str(tmp_path / "absent.json")]) == 1
+        capsys.readouterr()
+
+
+class TestStepSummary:
+    def test_writes_markdown_table(self, bench_regression, tmp_path,
+                                   monkeypatch):
+        out = tmp_path / "summary.md"
+        monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(out))
+        rows = [("pallas.1/wall_s", 100.0, 90.0, 0.9, False),
+                ("dense.1/wall_s", 100.0, 70.0, 0.7, True)]
+        bench_regression.write_step_summary(
+            [("BENCH_e2e.json", rows, ["gated.1/wall_s"], None),
+             ("BENCH_eval.json", [], [], "skipped: config mismatch")], 0.2)
+        text = out.read_text()
+        assert "| `pallas.1/wall_s` | 100 | 90 | -10.0% |" in text
+        assert "regressed" in text  # the -30% row is flagged
+        assert "`gated.1/wall_s`" in text and "skipped" in text
+        assert "config mismatch" in text
+
+    def test_noop_outside_actions(self, bench_regression, monkeypatch):
+        monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+        bench_regression.write_step_summary(
+            [("BENCH_e2e.json", [], [], "note")], 0.2)  # must not raise

@@ -226,6 +226,85 @@ class TestFusedPipelineKernel:
         np.testing.assert_array_equal(acc, whole)
 
 
+class TestMacroTileFusedPipeline:
+    """Macro-tiling (mrows×mcols blocks per grid step) is pure dispatch
+    layout: every macro shape — including ragged ones that zero-pad the
+    block grid — must be BIT-identical to the single-block-per-step path,
+    for both reset modes and any T."""
+
+    def _run(self, *, h, w, t_in, t_out, reset, mrows, mcols, nbt=None,
+             bh=6, bw=8, kh=3, cin=8, kout=16, seed=0, v0=None):
+        rng = np.random.default_rng(seed)
+        w_int = _sparse_int8_weights(seed + 1, kh, kh, cin, kout, 0.3)
+        pw = ops.pack_conv_weights(w_int, kblk=8)
+        affine = ops.affine_bundle(
+            pw,
+            jnp.float32(1.0 / 128),
+            jnp.asarray(rng.normal(size=kout), jnp.float32),
+            jnp.asarray(rng.random(kout) + 0.5, jnp.float32),
+            jnp.asarray(rng.normal(size=kout), jnp.float32),
+            jnp.asarray(rng.normal(size=kout), jnp.float32),
+        )
+        x_t = jnp.asarray(rng.integers(0, 2, (t_in, 2, h, w, cin)), jnp.float32)
+        return ops.fused_conv_bn_lif(
+            x_t, pw, affine, v0=v0, out_t=t_out, in_bits=1,
+            bn_scale=0.5, threshold=0.5, leak=0.25, reset=reset,
+            bh=bh, bw=bw, nbt=nbt if nbt is not None else mrows * mcols,
+            mrows=mrows, mcols=mcols,
+        )
+
+    @pytest.mark.parametrize("t_in,t_out", [(1, 1), (3, 3), (1, 3)])
+    @pytest.mark.parametrize("reset", ["hard", "soft"])
+    def test_macro_tile_bit_equals_single_block(self, t_in, t_out, reset):
+        """2×2 macro-tile over an exactly-divisible 4×4 block grid vs the
+        single-block baseline: spikes AND membranes bit-equal."""
+        kw = dict(h=24, w=32, t_in=t_in, t_out=t_out, reset=reset)
+        spk_b, mem_b = self._run(mrows=1, mcols=1, **kw)
+        spk_m, mem_m = self._run(mrows=2, mcols=2, **kw)
+        np.testing.assert_array_equal(np.asarray(spk_m), np.asarray(spk_b))
+        np.testing.assert_array_equal(np.asarray(mem_m), np.asarray(mem_b))
+
+    @pytest.mark.parametrize("mrows,mcols", [(2, 2), (1, 3), (3, 1), (4, 4)])
+    def test_ragged_block_grid(self, mrows, mcols):
+        """18×24 at 6×8 blocks is a 3×3 block grid — NOT divisible by any
+        of these macro shapes, so whole zero blocks are padded in and
+        stripped out. Still bit-exact (macros > grid clip to it)."""
+        kw = dict(h=18, w=24, t_in=3, t_out=3, reset="hard")
+        spk_b, mem_b = self._run(mrows=1, mcols=1, **kw)
+        spk_m, mem_m = self._run(mrows=mrows, mcols=mcols, **kw)
+        np.testing.assert_array_equal(np.asarray(spk_m), np.asarray(spk_b))
+        np.testing.assert_array_equal(np.asarray(mem_m), np.asarray(mem_b))
+
+    def test_dot_granularity_inside_macro(self):
+        """nbt (blocks per MXU dot) sweeps independently of the macro
+        shape; every divisor of the macro-tile size is bit-equal."""
+        kw = dict(h=24, w=32, t_in=3, t_out=3, reset="soft")
+        spk_b, mem_b = self._run(mrows=1, mcols=1, **kw)
+        for nbt in (1, 2, 4):
+            spk_m, mem_m = self._run(mrows=2, mcols=2, nbt=nbt, **kw)
+            np.testing.assert_array_equal(np.asarray(spk_m), np.asarray(spk_b))
+            np.testing.assert_array_equal(np.asarray(mem_m), np.asarray(mem_b))
+
+    def test_warm_membrane_macro(self):
+        """v0-carrying (streaming session) dispatch under a macro-tile."""
+        rng = np.random.default_rng(7)
+        v0 = jnp.asarray(rng.normal(size=(2, 24, 32, 16)) * 0.3, jnp.float32)
+        kw = dict(h=24, w=32, t_in=3, t_out=3, reset="hard", v0=v0)
+        spk_b, mem_b = self._run(mrows=1, mcols=1, **kw)
+        spk_m, mem_m = self._run(mrows=4, mcols=2, **kw)
+        np.testing.assert_array_equal(np.asarray(spk_m), np.asarray(spk_b))
+        np.testing.assert_array_equal(np.asarray(mem_m), np.asarray(mem_b))
+
+    def test_legacy_flat_nbt_maps_to_row_macro(self):
+        """Bare nbt>1 with no macro shape keeps working (normalized to a
+        1×nbt macro-tile) and stays bit-equal to nbt=1."""
+        kw = dict(h=24, w=32, t_in=3, t_out=3, reset="hard")
+        spk_b, mem_b = self._run(mrows=1, mcols=1, **kw)
+        spk_f, mem_f = self._run(mrows=1, mcols=1, nbt=4, **kw)
+        np.testing.assert_array_equal(np.asarray(spk_f), np.asarray(spk_b))
+        np.testing.assert_array_equal(np.asarray(mem_f), np.asarray(mem_b))
+
+
 class TestBitmaskMatmulKernel:
     @pytest.mark.parametrize(
         "m,k,n,density", [(32, 64, 48, 0.2), (100, 128, 64, 0.5), (16, 512, 256, 0.1)]
