@@ -3,7 +3,7 @@
 PY ?= python
 PYTHONPATH := src
 
-.PHONY: test regen-goldens check-goldens check-autotune bench-regression sharded-eval-sim
+.PHONY: test regen-goldens check-goldens check-autotune bench-regression sharded-eval-sim distributed-smoke
 
 # tier-1 suite
 test:
@@ -45,3 +45,12 @@ sharded-eval-sim:
 		PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest tests/test_sharded_eval.py -q
 	JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.eval_map --fast --shards 4
+
+# The multi-CONTROLLER lane, runnable locally: each test spawns a REAL
+# 2-process jax.distributed job (local coordinator, gloo CPU collectives,
+# one device per process) and gates eval-mAP bit-parity, data-parallel
+# train-loss parity, and the 2-host-save -> 1-host-restore checkpoint
+# round-trip against single-host references.
+distributed-smoke:
+	JAX_PLATFORMS=cpu PYTHONPATH=$(PYTHONPATH) \
+		$(PY) -m pytest tests/test_multihost.py -q

@@ -45,12 +45,15 @@ def run_checkpoint(ckpt: str, *, eval_images: int = 48, shards: int = 1,
     from repro.data import detection_datasets as dd
     from repro.eval import harness
 
+    from repro.distributed import runtime
+
     source = dd.parse_dataset_spec(dataset)
+    ctx = runtime.get_context()
     cfg, params, bn, step = harness.restore_detector_checkpoint(ckpt)
     det = harness.compile_eval_detector(cfg, params, bn)
     rep = harness.evaluate_detector(
         det, n_images=eval_images, source=source,
-        sharded=shards if shards > 1 else None,
+        sharded=shards if shards > 1 else None, ctx=ctx,
     )
     print(f"  checkpoint {ckpt} (step {step}, arch {cfg.arch_id}): "
           f"mAP@0.5 {rep['map']:.4f} on {rep['n_images']} images")
@@ -94,13 +97,14 @@ def run(*, steps: int = 3500, finetune_steps: int = 600, batch: int = 6,
         eval_images: int = 48, shards: int = 1, dataset: str = "synthetic",
         ckpt_dir: str = None, out_json: str = "BENCH_eval.json") -> dict:
     from repro.data import detection_datasets as dd
+    from repro.distributed import runtime
     from repro.eval import harness
 
     source = dd.parse_dataset_spec(dataset)
     report = harness.run_pipeline(
         steps=steps, finetune_steps=finetune_steps, batch=batch,
         eval_images=eval_images, eval_shards=shards, source=source,
-        ckpt_dir=ckpt_dir, verbose=True,
+        ckpt_dir=ckpt_dir, verbose=True, ctx=runtime.get_context(),
     )
     s = report.summary()
     results = {

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import zlib
 from typing import Iterator, Optional
 
 import numpy as np
@@ -47,7 +48,10 @@ def batch_at(
     rows = []
     for b in range(batch_size):
         idx = (step * batch_size + b) * n_hosts + host_id
-        rng = np.random.default_rng((hash(split) & 0xFFFF, seed, idx))
+        # crc32, not hash(): str hashing is salted per process (PYTHONHASHSEED)
+        # and would feed every host of a multi-controller job DIFFERENT data
+        # for the same (split, seed, idx).
+        rng = np.random.default_rng((zlib.crc32(split.encode()) & 0xFFFF, seed, idx))
         rows.append(_doc(rng, seq_len + 1, vocab))
     arr = np.stack(rows)
     return {"tokens": arr[:, :-1], "labels": arr[:, 1:]}

@@ -32,14 +32,32 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     )
 
 
-def make_mesh(shape, axes):
+def make_mesh(shape, axes, *, devices=None):
     """``jax.make_mesh`` with explicit Auto axis types where the installed
     jax has the explicit-sharding API (``jax.sharding.AxisType``), plain
-    otherwise (older jax is Auto-only, so the meaning is unchanged)."""
+    otherwise (older jax is Auto-only, so the meaning is unchanged).
+
+    ``devices``: explicit device sequence to build the mesh over — the
+    multi-controller path passes ``DistributedContext.global_devices`` so
+    mesh axes span EVERY host's devices, never just the local ones. Falls
+    back to a direct ``Mesh`` construction on jax versions whose
+    ``make_mesh`` lacks the kwarg."""
+    kwargs = {}
+    if devices is not None:
+        need = int(np.prod(shape))
+        if len(devices) < need:
+            raise ValueError(
+                f"mesh shape {tuple(shape)} needs {need} devices but the "
+                f"context sees only {len(devices)}"
+            )
+        devices = tuple(devices)[:need]
+        if "devices" not in inspect.signature(jax.make_mesh).parameters:
+            return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+        kwargs["devices"] = devices
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is not None:
-        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
-    return jax.make_mesh(shape, axes)
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kwargs)
 
 
 def local_device_mesh(n: int, axis_name: str = "data"):

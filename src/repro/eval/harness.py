@@ -105,6 +105,7 @@ def evaluate_detector(
     iou_threshold: float = 0.5,
     sharded=None,
     source: Optional[dd.DetectionSource] = None,
+    ctx=None,
 ) -> dict:
     """mAP@iou of a :class:`~repro.serve.detector.CompiledDetector` on an
     eval split. ``source`` is any :class:`~repro.data.detection_datasets.
@@ -121,6 +122,10 @@ def evaluate_detector(
     striped split, per-shard forward→decode→NMS, collective reduction of
     the pooled match stats. The result is bit-identical to this single-host
     path for any shard count (tests/test_sharded_eval.py).
+
+    ``ctx``: a :class:`repro.distributed.runtime.DistributedContext` —
+    under a multi-controller launch each host walks only the shards it owns
+    and the pooled stats are gathered across hosts (requires ``sharded``).
     """
     source = source or dd.SyntheticSource()
     cap = source.num_eval_images(split)
@@ -135,7 +140,7 @@ def evaluate_detector(
         )
         return se.evaluate_detector_sharded(
             det, n_images=n_images, split=split, iou_threshold=iou_threshold,
-            eval_cfg=eval_cfg, source=source,
+            eval_cfg=eval_cfg, source=source, ctx=ctx,
         )
     cfg = det.cfg
     images, gts = source.eval_set(
@@ -342,6 +347,7 @@ def run_pipeline(
     source: Optional[dd.DetectionSource] = None,
     ckpt_dir: Optional[str] = None,
     verbose: bool = True,
+    ctx=None,
 ) -> EvalReport:
     """The scaled-down Table I / Fig 15 reproduction.
 
@@ -390,7 +396,8 @@ def run_pipeline(
     def _eval(tag, c, p, b):
         det = compile_eval_detector(c, p, b)
         stages[tag] = evaluate_detector(det, n_images=eval_images,
-                                        sharded=sharded_cfg, source=source)
+                                        sharded=sharded_cfg, source=source,
+                                        ctx=ctx)
         if verbose:
             aps = ", ".join(f"{a:.3f}" for a in stages[tag]["per_class_ap"])
             print(f"  [{tag}] mAP@0.5 {stages[tag]['map']:.3f}  (per-class {aps})")
@@ -442,6 +449,7 @@ def run_pipeline(
             n_images=eval_images,
             sharded=sharded_cfg,
             source=source,
+            ctx=ctx,
         ),
     }
     report = EvalReport(

@@ -24,12 +24,20 @@ therefore mAP) is bit-identical to the single-host evaluation:
 
 The same code runs on 1 CPU device (host gather), N simulated CPU devices
 (``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the
-``sharded-eval-sim`` CI lane), and a real single-process multi-device
-mesh, switching only on ``ShardedEvalConfig.use_device_mesh`` / device
-availability. Multi-CONTROLLER (one process per host) runs are specified
-by the same striping + reduction contract but not yet wired:
-``evaluate_detector_sharded`` refuses them loudly rather than silently
-duplicating every shard's forward work per host.
+``sharded-eval-sim`` CI lane), a real single-process multi-device mesh,
+and a multi-CONTROLLER job (one process per host, launched through
+``distributed.runtime.initialize``): process ``i`` owns shards
+``i, i+P, i+2P, ...`` per :meth:`DistributedContext.owned_shards`, walks
+ONLY those stripes, and the per-host merged records reduce through the
+same ``eval_stats_allgather`` collective — run over the context's
+:meth:`~repro.distributed.runtime.DistributedContext.stripe_mesh` (one
+device per host, crossing process boundaries) instead of
+``local_device_mesh``'s local subset. The stable re-sort by global image
+index makes host/shard interleaving invisible, so the multi-host report is
+bit-identical to the single-host one (the ``distributed-smoke`` CI lane's
+gate). ``n_shards`` must stripe evenly over the hosts
+(``n_shards % n_hosts == 0``) — anything else skews ownership and is
+refused loudly.
 
 Scores travel as float32 — the detector's native dtype, so the device hop
 is bit-preserving. (Hand-crafted float64 scores that are not
@@ -235,6 +243,75 @@ def _gather_mesh(stats: Sequence[ShardStats], axis_name: str) -> ShardStats:
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _process_gather_fn(n_hosts: int, axis_name: str):
+    """(stripe mesh, jitted gather) for the cross-host reduction — one
+    device per host, cached per (n_hosts, axis) like :func:`_mesh_gather_fn`
+    (the process topology is fixed for the process lifetime)."""
+    import jax
+
+    from repro.distributed import collectives as C
+    from repro.distributed import runtime
+
+    mesh = runtime.get_context().stripe_mesh(axis_name)
+    return mesh, jax.jit(C.eval_stats_allgather(mesh, axis_name))
+
+
+def _gather_process(local: ShardStats, ctx, axis_name: str) -> ShardStats:
+    """The multi-controller reduction: every host contributes ONE row (its
+    merged owned-shard records) to the ``eval_stats_allgather`` collective
+    over the context's stripe mesh. Two phases: an int all-gather agrees on
+    the padded row capacity (hosts own different record counts), then the
+    padded rows gather and the GT counts psum — both exact, so this is the
+    cross-process twin of :func:`_gather_mesh`."""
+    import jax
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    mesh, gather_fn = _process_gather_fn(ctx.n_hosts, axis_name)
+    sharding = NamedSharding(mesh, P(axis_name))
+    n = ctx.n_hosts
+
+    def to_global(arr):  # local (1, ...) row -> (n_hosts, ...) global array
+        return jax.make_array_from_process_local_data(
+            sharding, arr, (n,) + arr.shape[1:]
+        )
+
+    sizes, _ = gather_fn(
+        {"n": to_global(np.array([[local.image_idx.size]], np.int32))},
+        to_global(np.zeros((1, 1), np.int32)),
+    )
+    cap = max(1, int(np.asarray(sizes["n"]).max()))
+
+    def pad(x, fill=0):
+        out = np.full((1, cap), fill, dtype=x.dtype)
+        out[0, : x.size] = x
+        return out
+
+    rows = {
+        "image_idx": pad(local.image_idx),
+        "cls": pad(local.cls),
+        "score": pad(local.score),
+        "tp": pad(local.tp),
+        "valid": pad(np.ones(local.image_idx.size, bool), fill=False),
+        "n_images": np.asarray([[local.n_images]], np.int32),
+    }
+    counts = local.n_gt[None].astype(np.int32)
+    gathered, total_gt = gather_fn(
+        {f: to_global(v) for f, v in rows.items()}, to_global(counts)
+    )
+    g = {f: np.asarray(v) for f, v in gathered.items()}
+    valid = g["valid"].astype(bool)
+    return ShardStats(
+        image_idx=np.concatenate([g["image_idx"][h][valid[h]] for h in range(n)]),
+        cls=np.concatenate([g["cls"][h][valid[h]] for h in range(n)]),
+        score=np.concatenate([g["score"][h][valid[h]] for h in range(n)]),
+        tp=np.concatenate([g["tp"][h][valid[h]].astype(bool) for h in range(n)]),
+        n_gt=np.asarray(total_gt, np.int32),
+        n_images=int(g["n_images"].sum()),
+    )
+
+
 def _pick_gather(eval_cfg: ShardedEvalConfig) -> str:
     if eval_cfg.n_shards == 1:
         return "host"  # nothing to reduce; no collective either way
@@ -252,23 +329,41 @@ def pool_stats(
     num_classes: int,
     iou_threshold: float = 0.5,
     eval_cfg: Optional[ShardedEvalConfig] = None,
+    ctx=None,
 ) -> dict:
     """Reduce per-shard stats and sweep AP — the sharded back half of
     ``detection_map.evaluate_detections``, bit-identical to it.
 
-    Gathers via the device collective or on host per ``eval_cfg``, then
-    stable-sorts the pooled records by global image index: shards hold
-    disjoint, internally-ascending index sets, so the re-sorted sequence is
-    exactly the order the single-host evaluator pooled in (same tie
-    resolution, same cumsum, same envelope). Returns the
-    ``evaluate_detections`` report dict plus ``n_shards``/``gather``.
+    Single-controller (``stats`` holds EVERY shard): gathers via the device
+    collective or on host per ``eval_cfg``. Multi-controller (``stats``
+    holds only this host's owned shards): host-merges the local shards,
+    then reduces across processes through :func:`_gather_process` over the
+    context's stripe mesh. Either way the pooled records stable-sort by
+    global image index: shards hold disjoint, internally-ascending index
+    sets, so the re-sorted sequence is exactly the order the single-host
+    evaluator pooled in (same tie resolution, same cumsum, same envelope).
+    Returns the ``evaluate_detections`` report dict plus
+    ``n_shards``/``n_hosts``/``gather``.
     """
-    eval_cfg = eval_cfg or ShardedEvalConfig(n_shards=len(stats))
-    gather = _pick_gather(eval_cfg)
-    merged = (
-        _gather_mesh(stats, eval_cfg.axis_name) if gather == "mesh"
-        else _gather_host(stats)
-    )
+    from repro.distributed import runtime
+
+    ctx = ctx or runtime.get_context()
+    if ctx.is_multi_controller:
+        eval_cfg = eval_cfg or ShardedEvalConfig(n_shards=len(stats) * ctx.n_hosts)
+        gather = "process"
+        local = (
+            _gather_host(stats) if stats else ShardStats.empty(num_classes)
+        )
+        merged = _gather_process(local, ctx, eval_cfg.axis_name)
+        n_shards = eval_cfg.n_shards
+    else:
+        eval_cfg = eval_cfg or ShardedEvalConfig(n_shards=len(stats))
+        gather = _pick_gather(eval_cfg)
+        merged = (
+            _gather_mesh(stats, eval_cfg.axis_name) if gather == "mesh"
+            else _gather_host(stats)
+        )
+        n_shards = len(stats)
     order = np.argsort(merged.image_idx, kind="stable")
     cls = merged.cls[order]
     score = merged.score[order]
@@ -287,7 +382,8 @@ def pool_stats(
         "n_pred": n_pred,
         "n_images": int(merged.n_images),
         "iou_threshold": float(iou_threshold),
-        "n_shards": len(stats),
+        "n_shards": n_shards,
+        "n_hosts": ctx.n_hosts,
         "gather": gather,
     }
 
@@ -323,6 +419,7 @@ def evaluate_predictions_sharded(
     num_classes: int,
     iou_threshold: float = 0.5,
     eval_cfg: Optional[ShardedEvalConfig] = None,
+    ctx=None,
 ) -> dict:
     """Sharded scoring of ALREADY-COMPUTED predictions (the serve
     ``--eval-map`` path and the shard-reduction property tests): stripe the
@@ -332,8 +429,17 @@ def evaluate_predictions_sharded(
     are float32-representable (detector outputs always are; pooled scores
     travel as float32, so hand-computed float64 scores that differ only
     past float32 precision would collapse into ties here while the
-    unsharded evaluator still ranks them apart)."""
-    eval_cfg = eval_cfg or ShardedEvalConfig()
+    unsharded evaluator still ranks them apart).
+
+    Multi-controller: this host matches only its OWNED shards
+    (``ctx.owned_shards``) and the reduce crosses processes — every host
+    must call with the SAME (predictions, ground_truths) pairing and
+    returns the same full report."""
+    from repro.distributed import runtime
+
+    ctx = ctx or runtime.get_context()
+    eval_cfg = eval_cfg or ShardedEvalConfig(n_shards=max(1, ctx.n_hosts))
+    ctx.validate_shard_count(eval_cfg.n_shards)
     predictions = list(predictions)
     ground_truths = list(ground_truths)
     if len(predictions) != len(ground_truths):
@@ -343,7 +449,7 @@ def evaluate_predictions_sharded(
         )
     n = len(predictions)
     stats = []
-    for s in range(eval_cfg.n_shards):
+    for s in ctx.owned_shards(eval_cfg.n_shards):
         idx = sd.eval_shard_indices(n, s, eval_cfg.n_shards)
         stats.append(
             match_stats(
@@ -356,7 +462,7 @@ def evaluate_predictions_sharded(
         )
     return pool_stats(
         stats, num_classes=num_classes, iou_threshold=iou_threshold,
-        eval_cfg=eval_cfg,
+        eval_cfg=eval_cfg, ctx=ctx,
     )
 
 
@@ -368,6 +474,7 @@ def evaluate_detector_sharded(
     iou_threshold: float = 0.5,
     eval_cfg: Optional[ShardedEvalConfig] = None,
     source=None,
+    ctx=None,
 ) -> dict:
     """Sharded ``harness.evaluate_detector``: each shard materializes only
     its stripe of the eval split (``source`` — any
@@ -380,26 +487,19 @@ def evaluate_detector_sharded(
     shard count (per-image outputs are bitwise invariant to batch grouping:
     integer-domain conv accumulation plus elementwise float stages).
 
-    Scope: SINGLE-PROCESS — one process walks every shard (sequentially;
-    on N local/simulated devices the reduction itself runs as a real
-    collective). Under multi-controller jax this would silently duplicate
-    the whole split's forward work per host and then device_put onto
-    non-addressable devices, so it refuses loudly; per-host shard
-    ownership (process i walks shards i, i+P, ...) is the follow-up that
-    turns the striping contract into multi-host wall-clock scaling."""
-    import jax
+    Multi-controller: process ``i`` walks ONLY its owned shards
+    ``i, i+P, ...`` (``ctx.owned_shards``) — forward work scales with
+    1/n_hosts wall-clock — and the reduce crosses processes through the
+    context's stripe mesh; every host returns the same full report.
+    ``eval_cfg`` defaults to one shard per host; an uneven
+    ``n_shards % n_hosts`` raises (``ctx.validate_shard_count``)."""
     import jax.numpy as jnp
 
-    if jax.process_count() > 1:
-        raise NotImplementedError(
-            "evaluate_detector_sharded is single-process: under "
-            f"multi-controller jax ({jax.process_count()} processes) each "
-            "host would redundantly evaluate every shard. Stripe per host "
-            "via eval_set(shard_id=..., n_shards=...) and reduce with "
-            "pool_stats instead."
-        )
+    from repro.distributed import runtime
 
-    eval_cfg = eval_cfg or ShardedEvalConfig()
+    ctx = ctx or runtime.get_context()
+    eval_cfg = eval_cfg or ShardedEvalConfig(n_shards=max(1, ctx.n_hosts))
+    ctx.validate_shard_count(eval_cfg.n_shards)
     cfg = det.cfg
     from repro.data import detection_datasets as dd
     from repro.eval.harness import grid_div
@@ -409,7 +509,7 @@ def evaluate_detector_sharded(
     if cap is not None:
         n_images = min(n_images, cap)
     stats = []
-    for s in range(eval_cfg.n_shards):
+    for s in ctx.owned_shards(eval_cfg.n_shards):
         images, gts = source.eval_set(
             n_images, split=split, hw=cfg.input_hw, grid_div=grid_div(cfg),
             num_anchors=cfg.num_anchors, num_classes=cfg.num_classes,
@@ -428,7 +528,7 @@ def evaluate_detector_sharded(
         )
     report = pool_stats(
         stats, num_classes=cfg.num_classes, iou_threshold=iou_threshold,
-        eval_cfg=eval_cfg,
+        eval_cfg=eval_cfg, ctx=ctx,
     )
     report["split"] = split
     return report

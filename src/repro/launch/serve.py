@@ -137,12 +137,16 @@ def _serve_detector(cfg, args):
 
         preds = [r.out[0] for r in sorted(done, key=lambda r: r.rid)]
         if args.eval_shards > 1:
+            from repro.distributed import runtime
+
             # score the served detections through the mesh-sharded reduction
             # (striped match stats, collective gather) — bit-identical to
-            # the single-host sweep below for any shard count
+            # the single-host sweep below for any shard count; the context
+            # routes shard ownership under a multi-controller launch
             rep = se.evaluate_predictions_sharded(
                 preds, gts, num_classes=cfg.num_classes, iou_threshold=0.5,
                 eval_cfg=se.ShardedEvalConfig(n_shards=args.eval_shards),
+                ctx=runtime.get_context(),
             )
             shard_note = f" ({rep['n_shards']} shards, {rep['gather']} gather)"
         else:

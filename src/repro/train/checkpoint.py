@@ -14,10 +14,18 @@ Design points for the 1000+ node posture:
   D2H) then writes on a background thread — training resumes immediately.
 * **Sharded/elastic**: each leaf is stored as the FULL logical array
   (restore re-shards with whatever mesh/sharding the new job uses, so a
-  restart on a different device count re-lowers and carries on). On a real
-  multi-host pod each host writes only its addressable shards and the
-  manifest stitches them; single-process here, the full-array path is the
-  degenerate case of that protocol.
+  restart on a different device count re-lowers and carries on).
+* **Multi-controller**: ``save(..., ctx=)`` under a multi-process launch
+  stripes LEAF OWNERSHIP over hosts (leaf i -> host i % n_hosts): every
+  host writes only the leaves it owns into the shared staging dir, posts a
+  token-stamped ``host_N.done`` receipt, and host 0 — after collecting
+  every receipt — assembles the manifest, writes the
+  ``shard_manifest.json`` sidecar recording who wrote what, and performs
+  the single rename-commit (the commit barrier). Leaves stay FULL logical
+  arrays (non-addressable ones are collectively replicated first, in
+  identical order on every host so the collectives line up), which is what
+  keeps restore topology-elastic: a checkpoint saved on 2 hosts restores
+  bit-exact on 1 host and vice versa.
 * **Self-describing**: manifest carries the pytree structure, so restore
   needs no template (but validates against one when given).
 * **Failure-surfacing**: a background write that dies (disk full, perms)
@@ -29,8 +37,10 @@ from __future__ import annotations
 
 import json
 import os
+import secrets
 import shutil
 import threading
+import time
 from dataclasses import dataclass
 from typing import Any, Mapping, Optional
 
@@ -38,7 +48,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-_RESERVED_FILES = ("manifest.json",)
+_RESERVED_FILES = ("manifest.json", "shard_manifest.json", "staging.json")
+
+# how long one host waits on the others during a sharded save before
+# declaring the job wedged (a crashed peer, not a slow disk)
+_HANDSHAKE_TIMEOUT_S = float(os.environ.get("REPRO_CKPT_HANDSHAKE_TIMEOUT", "120"))
 
 
 def _flatten_with_paths(tree: Any):
@@ -48,16 +62,48 @@ def _flatten_with_paths(tree: Any):
     return paths, leaves, treedef
 
 
+def _full_host_array(leaf) -> np.ndarray:
+    """The FULL logical value of a leaf as a host array.
+
+    Non-fully-addressable global arrays (multi-controller shardings) are
+    collectively replicated first — EVERY host must therefore walk the
+    leaves in the same order, or the replication collectives desync. The
+    addressability predicate is a pure function of the (identical) sharding,
+    so the walk stays aligned without any extra coordination."""
+    if isinstance(leaf, jax.Array) and not leaf.is_fully_addressable:
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("_ckpt",))
+        rep = jax.jit(
+            lambda a: a,
+            out_shardings=jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()
+            ),
+        )(leaf)
+        return np.asarray(rep.addressable_data(0))
+    return np.asarray(jax.device_get(leaf))
+
+
 def save(root: str, step: int, tree: Any, *,
-         extra_files: Optional[Mapping[str, bytes]] = None) -> str:
+         extra_files: Optional[Mapping[str, bytes]] = None,
+         ctx=None) -> str:
     """Synchronous atomic save. Returns the committed directory.
 
     ``extra_files``: {filename: bytes} sidecars (e.g. a config json) written
     into the staging dir before the rename — they commit atomically with
     the checkpoint, so a reader never sees a step dir missing its sidecar.
+
+    ``ctx``: the :class:`repro.distributed.runtime.DistributedContext`.
+    Multi-controller: EVERY host must call save with the same arguments;
+    each writes only the leaves it owns (leaf i -> host i % n_hosts) and
+    host 0 performs the commit. Single-controller (the default context):
+    unchanged single-writer path.
     """
+    from repro.distributed import runtime
+
+    ctx = ctx or runtime.get_context()
     paths, leaves, _ = _flatten_with_paths(tree)
-    host = [np.asarray(jax.device_get(l)) for l in leaves]
+    host = [_full_host_array(l) for l in leaves]
+    if ctx.is_multi_controller:
+        return _write_sharded(root, step, paths, host, extra_files, ctx)
     return _write(root, step, paths, host, extra_files)
 
 
@@ -84,7 +130,19 @@ def save_async(root: str, step: int, tree: Any, *,
     A write failure is recorded on the pending entry and re-raised by the
     next :func:`wait_pending` — call it before exit (ft.Supervisor.run and
     the training examples do) or the failure is lost with the process.
+
+    Single-controller ONLY: the sharded protocol runs replication
+    collectives and a cross-host handshake, neither of which may happen on
+    a background thread (collectives issued off the main thread deadlock
+    against the step loop). Multi-controller jobs use :func:`save`.
     """
+    from repro.distributed import runtime
+
+    if runtime.get_context().is_multi_controller:
+        raise NotImplementedError(
+            "save_async is single-controller only — multi-controller jobs "
+            "must use the synchronous save(..., ctx=ctx) sharded protocol"
+        )
     paths, leaves, _ = _flatten_with_paths(tree)
     host = [np.asarray(jax.device_get(l)) for l in leaves]  # D2H barrier only
     pending = _PendingSave(root=os.path.abspath(root), step=step, thread=None)
@@ -128,11 +186,7 @@ def _write(root: str, step: int, paths, host_leaves, extra_files=None) -> str:
         manifest["leaves"].append(
             {"path": p, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
         )
-    for fname, blob in (extra_files or {}).items():
-        if fname in _RESERVED_FILES or fname.startswith("leaf_"):
-            raise ValueError(f"extra_files name {fname!r} collides with checkpoint layout")
-        with open(os.path.join(tmp, fname), "wb") as f:
-            f.write(blob)
+    _write_extras(tmp, extra_files)
     mpath = os.path.join(tmp, "manifest.json")
     with open(mpath, "w") as f:
         json.dump(manifest, f)
@@ -141,6 +195,130 @@ def _write(root: str, step: int, paths, host_leaves, extra_files=None) -> str:
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)  # commit
+    return final
+
+
+def _write_extras(tmp: str, extra_files) -> None:
+    for fname, blob in (extra_files or {}).items():
+        if (fname in _RESERVED_FILES or fname.startswith("leaf_")
+                or fname.startswith("host_")):
+            raise ValueError(f"extra_files name {fname!r} collides with checkpoint layout")
+        with open(os.path.join(tmp, fname), "wb") as f:
+            f.write(blob)
+
+
+def _json_atomic(path: str, obj) -> None:
+    swap = path + ".swap"
+    with open(swap, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(swap, path)
+
+
+def _read_json(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return None
+
+
+def _wait_for(pred, desc: str, ctx) -> None:
+    deadline = time.monotonic() + _HANDSHAKE_TIMEOUT_S
+    while not pred():
+        if time.monotonic() > deadline:
+            raise RuntimeError(
+                f"[{ctx.describe()}] sharded-checkpoint handshake timed out "
+                f"after {_HANDSHAKE_TIMEOUT_S:.0f}s waiting for {desc}"
+            )
+        time.sleep(0.05)
+
+
+def _write_sharded(root: str, step: int, paths, host_leaves, extra_files, ctx) -> str:
+    """Multi-controller save over a SHARED filesystem.
+
+    Protocol (token-stamped so a retried save can never consume a previous
+    attempt's receipts):
+      1. host 0 resets the staging dir and posts ``staging.json`` with a
+         fresh token; peers wait for it.
+      2. every host writes the leaves it OWNS (leaf i -> host i % n_hosts)
+         and posts a ``host_N.done`` receipt echoing the token.
+      3. host 0 collects all receipts, writes ``shard_manifest.json`` (who
+         wrote what), the extra sidecars and ``manifest.json``, then
+         rename-commits — the commit barrier.
+      4. peers wait for the committed dir to carry their token.
+    Any wait gives up after REPRO_CKPT_HANDSHAKE_TIMEOUT (default 120 s)
+    with the waiting host's id in the error — a crashed peer, not a hang.
+    """
+    final = os.path.join(root, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    h, n = ctx.host_id, ctx.n_hosts
+    staging = os.path.join(tmp, "staging.json")
+
+    if h == 0:
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        token = secrets.token_hex(8)
+        _json_atomic(staging, {"step": step, "token": token, "n_hosts": n})
+    else:
+        _wait_for(
+            lambda: (_read_json(staging) or {}).get("step") == step,
+            f"host 0 to open staging for step {step}", ctx,
+        )
+        token = _read_json(staging)["token"]
+
+    owned_files = []
+    for i, arr in enumerate(host_leaves):
+        if i % n != h:
+            continue
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        owned_files.append(fname)
+    _json_atomic(
+        os.path.join(tmp, f"host_{h}.done"),
+        {"token": token, "host": h, "files": owned_files},
+    )
+
+    if h == 0:
+        def receipts():
+            got = [_read_json(os.path.join(tmp, f"host_{p}.done")) for p in range(n)]
+            return all(r is not None and r.get("token") == token for r in got)
+
+        _wait_for(receipts, "peer hosts' leaf receipts", ctx)
+        shard_manifest = {
+            "token": token,
+            "n_hosts": n,
+            "striping": "leaf i -> host i % n_hosts",
+            "hosts": {
+                str(p): _read_json(os.path.join(tmp, f"host_{p}.done"))["files"]
+                for p in range(n)
+            },
+        }
+        _json_atomic(os.path.join(tmp, "shard_manifest.json"), shard_manifest)
+        _write_extras(tmp, extra_files)
+        manifest = {"step": step, "n_hosts": n, "leaves": []}
+        for i, (p, arr) in enumerate(zip(paths, host_leaves)):
+            manifest["leaves"].append(
+                {"path": p, "file": f"leaf_{i:05d}.npy",
+                 "shape": list(arr.shape), "dtype": str(arr.dtype),
+                 "host": i % n}
+            )
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # commit barrier: peers unblock on this
+    else:
+        _wait_for(
+            lambda: (_read_json(os.path.join(final, "shard_manifest.json")) or {})
+            .get("token") == token,
+            f"host 0 to commit step {step}", ctx,
+        )
     return final
 
 
@@ -215,7 +393,17 @@ def restore(root: str, template: Any, *, step: Optional[int] = None, shardings: 
         if tuple(arr.shape) != tuple(tmpl.shape):
             raise ValueError(f"shape mismatch at {p}: ckpt {arr.shape} vs template {tmpl.shape}")
         arr = arr.astype(tmpl.dtype)
-        out.append(jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr))
+        if sh is not None and not getattr(sh, "is_fully_addressable", True):
+            # multi-controller sharding: device_put cannot build an array
+            # spanning other hosts' devices — materialize per-shard from
+            # the full host copy (every host read the same file)
+            out.append(
+                jax.make_array_from_callback(arr.shape, sh, lambda idx, a=arr: a[idx])
+            )
+        elif sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
     return treedef.unflatten(out), step
 
 

@@ -77,7 +77,13 @@ class StragglerMonitor:
 
 @dataclass
 class Supervisor:
-    """Bounded-retry restart-from-last-good training supervisor."""
+    """Bounded-retry restart-from-last-good training supervisor.
+
+    ``ctx``: the :class:`repro.distributed.runtime.DistributedContext` —
+    under a multi-controller launch checkpoint saves go through the sharded
+    protocol, garbage collection runs on host 0 only, and a run that gives
+    up re-raises with THIS host's id in the message so multi-process CI
+    failures are attributable to their origin."""
 
     ckpt_root: str
     max_restarts: int = 3
@@ -86,6 +92,26 @@ class Supervisor:
     heartbeat: Optional[Heartbeat] = None
     straggler: StragglerMonitor = field(default_factory=StragglerMonitor)
     restarts: int = 0
+    ctx: Any = None
+
+    def _context(self):
+        if self.ctx is None:
+            from repro.distributed import runtime
+
+            self.ctx = runtime.get_context()
+        return self.ctx
+
+    def _give_up(self, e: Exception):
+        """Re-raise with the failing host's coordinates prepended —
+        keeping the original exception type when its constructor allows,
+        so callers matching on type (tests, retry policies) still do."""
+        msg = f"[{self._context().describe()}] training gave up after " \
+              f"{self.restarts - 1} restarts: {e}"
+        try:
+            exc = type(e)(msg)
+        except Exception:  # noqa: BLE001 — exotic exception signature
+            exc = RuntimeError(msg)
+        raise exc from e
 
     def run(
         self,
@@ -116,13 +142,15 @@ class Supervisor:
                 if self.heartbeat:
                     self.heartbeat.beat(step)
                 if (step + 1) % self.save_every == 0 or step + 1 == n_steps:
-                    ckpt.save(self.ckpt_root, step, state)
-                    ckpt.gc_old(self.ckpt_root, keep=self.keep)
+                    ctx = self._context()
+                    ckpt.save(self.ckpt_root, step, state, ctx=ctx)
+                    if ctx.host_id == 0:
+                        ckpt.gc_old(self.ckpt_root, keep=self.keep)
                 step += 1
-            except Exception:
+            except Exception as e:
                 self.restarts += 1
                 if self.restarts > self.max_restarts:
-                    raise
+                    self._give_up(e)
                 # settle in-flight async saves before picking the restore
                 # point; a failed write re-raises here instead of being
                 # silently dropped by the restart

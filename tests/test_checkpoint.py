@@ -215,11 +215,17 @@ def test_supervisor_gives_up(tmp_path):
         raise RuntimeError("always fails")
 
     sup = ft.Supervisor(ckpt_root=str(tmp_path), max_restarts=2)
-    with pytest.raises(RuntimeError):
+    with pytest.raises(RuntimeError) as exc_info:
         sup.run(init_state=lambda: {"x": jnp.zeros(())},
                 state_template=lambda: {"x": jax.ShapeDtypeStruct((), jnp.float32)},
                 step_fn=bad_step, n_steps=5)
     assert sup.restarts == 3
+    # the give-up re-raise attributes the failure to its host of origin
+    # (multi-process CI shows "[host i/P]"; the identity context is 0/1)
+    # while keeping the original exception type and chaining the cause
+    assert "[host 0/1]" in str(exc_info.value)
+    assert "always fails" in str(exc_info.value)
+    assert isinstance(exc_info.value.__cause__, RuntimeError)
 
 
 def test_straggler_monitor():
